@@ -1,0 +1,111 @@
+"""Shared benchmark scaffolding.
+
+Every paper-table benchmark runs the REAL federated protocol on the
+synthetic non-IID corpus with a reduced backbone (DESIGN.md §6: trend-level
+validation — orderings and deltas, not absolute accuracies). All runs are
+deterministic in the seed; per-table results are printed as a small table
+AND returned as CSV rows ``name,us_per_call,derived`` for benchmarks.run.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import jax
+
+from repro.configs import get_smoke_config
+from repro.core import HyperParams, run_centralized, run_federated
+from repro.data import make_federated_data
+
+# the two "backbones" of the paper, reduced to bench scale
+BACKBONES = {
+    "minigpt4": "minigpt4-7b",
+    "llava": "llava-1.5-7b",
+}
+
+
+def bench_config(arch: str, **overrides):
+    cfg = get_smoke_config(arch)
+    kw = dict(n_layers=2, d_model=128, n_heads=4, n_kv_heads=4, head_dim=32,
+              d_ff=256)
+    if cfg.frontend_dim:
+        kw["frontend_dim"] = 64
+    kw.update(overrides)
+    return cfg.with_(**kw)
+
+
+def run_strategy(
+    arch_key: str,
+    strategy: str,
+    *,
+    clients: int = 5,
+    rounds: int = 4,
+    local_steps: int = 10,
+    alpha: float = 1.0,
+    lr: float = 1e-2,
+    seed: int = 0,
+    examples_per_client: int = 32,
+    seq_len: int = 24,
+    batch_size: int = 8,
+    rank: int | None = None,
+    modalities: Tuple[str, ...] | None = None,
+    task_ids: List[int] | None = None,
+) -> Tuple[Dict, float]:
+    """Run one (backbone × strategy) cell; returns (result dict, wall seconds)."""
+    import dataclasses
+
+    cfg = bench_config(BACKBONES.get(arch_key, arch_key))
+    acfg = cfg.adapter
+    if rank is not None:
+        acfg = dataclasses.replace(acfg, rank=rank, alpha=2.0 * rank)
+    if modalities is not None:
+        acfg = dataclasses.replace(acfg, modalities=modalities)
+    cfg = cfg.with_(adapter=acfg)
+
+    if task_ids:  # cross-task setup (Tab. 5): one synthetic task per client
+        train, evald = {}, {}
+        for cid, tid in enumerate(task_ids):
+            t, e, _ = make_federated_data(
+                cfg, n_clients=1, examples_per_client=examples_per_client,
+                alpha=alpha, batch_size=batch_size, seq_len=seq_len,
+                seed=seed + tid, task_id=tid,
+            )
+            train[cid], evald[cid] = t[0], e[0]
+    else:
+        train, evald, _ = make_federated_data(
+            cfg, n_clients=clients, examples_per_client=examples_per_client,
+            alpha=alpha, batch_size=batch_size, seq_len=seq_len, seed=seed,
+        )
+
+    hp = HyperParams(lr=lr, local_steps=local_steps, fisher_batches=2)
+    key = jax.random.PRNGKey(seed)
+    t0 = time.time()
+    if strategy == "centralized":
+        res = run_centralized(key, cfg, train, evald,
+                              steps=rounds * local_steps * len(train), hp=hp)
+    else:
+        res = run_federated(key, cfg, train, evald, strategy=strategy,
+                            rounds=rounds, hp=hp)
+    dt = time.time() - t0
+    out = {
+        "avg_accuracy": res.avg_accuracy,
+        "client_accuracy": res.client_accuracy,
+        "comm_totals": res.comm_totals,
+        "final_loss": res.round_metrics[-1]["mean_loss"] if res.round_metrics else None,
+    }
+    return out, dt
+
+
+def csv_row(name: str, wall_s: float, derived) -> str:
+    us = wall_s * 1e6
+    return f"{name},{us:.0f},{derived}"
+
+
+def print_table(title: str, rows: List[Tuple[str, Dict]]):
+    print(f"\n### {title}")
+    cids = sorted(next(iter(rows))[1]["client_accuracy"]) if rows else []
+    header = "approach".ljust(14) + "".join(f"C{c+1:<7}" for c in cids) + "avg"
+    print(header)
+    for name, r in rows:
+        cells = "".join(f"{100*r['client_accuracy'][c]:<8.2f}" for c in cids)
+        print(f"{name:<14}{cells}{100*r['avg_accuracy']:.2f}")

@@ -1,0 +1,85 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.run            # quick mode (CI-scale)
+    PYTHONPATH=src python -m benchmarks.run --full     # paper-scale trends
+
+Prints human-readable tables per benchmark followed by a machine-readable
+``name,us_per_call,derived`` CSV block (one line per measured cell).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _rows(mod, quick):
+    out = mod.run(quick=quick)
+    norm = []
+    for r in out or []:
+        if isinstance(r, str):
+            norm.append(r)
+        else:
+            name, wall, derived = r
+            norm.append(f"{name},{wall*1e6:.0f},{derived}")
+    return norm
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true", help="paper-scale (slower)")
+    ap.add_argument("--only", default=None, help="run a single benchmark module")
+    args = ap.parse_args(argv)
+    quick = not args.full
+
+    from benchmarks import (
+        ext_beyond,
+        fig3a_commfreq,
+        fig3b_rank,
+        kernel_bench,
+        roofline_table,
+        table1_efficiency,
+        table2_main,
+        table3_heterogeneity,
+        table4_clients10,
+        table5_crosstask,
+        table6_adapters,
+        table7_ef,
+    )
+
+    mods = {
+        "table1": table1_efficiency,
+        "table2": table2_main,
+        "table3": table3_heterogeneity,
+        "table4": table4_clients10,
+        "table5": table5_crosstask,
+        "table6": table6_adapters,
+        "table7": table7_ef,
+        "fig3a": fig3a_commfreq,
+        "fig3b": fig3b_rank,
+        "kernels": kernel_bench,
+        "ext": ext_beyond,
+        "roofline": roofline_table,
+    }
+    if args.only:
+        mods = {args.only: mods[args.only]}
+
+    all_rows = []
+    t0 = time.time()
+    for name, mod in mods.items():
+        t1 = time.time()
+        try:
+            all_rows.extend(_rows(mod, quick))
+        except Exception as e:  # keep the harness running; report the failure
+            print(f"[bench {name}] FAILED: {type(e).__name__}: {e}", file=sys.stderr)
+            all_rows.append(f"{name}/FAILED,0,{type(e).__name__}")
+        print(f"    [{name} done in {time.time()-t1:.1f}s]")
+
+    print(f"\n==== CSV (name,us_per_call,derived) — total {time.time()-t0:.1f}s ====")
+    for row in all_rows:
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

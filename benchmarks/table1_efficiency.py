@@ -1,0 +1,42 @@
+"""Tab. 1 — parameter distribution & communication efficiency (EXACT).
+
+Computed analytically from the real LLaVA-1.5-7B config (no simulation):
+client params, per-round uploads, and the reductions vs FedDPA-F-style
+PEFT FL with rank-64 adapters inside the LLM.
+"""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core.comm import adapter_upload_params, client_storage_params
+
+
+def run(quick: bool = True):
+    cfg = get_config("llava-1.5-7b")
+    s = client_storage_params(cfg)
+    up_nano = adapter_upload_params(cfg)
+    up_peft = s["uploads_peft_rank64"]
+    total_model = s["backbone_total"] + s["encoder"] + s["connector"]
+
+    client_red = 1 - s["fednano_client_total"] / s["peft_client_total"]
+    upload_red = 1 - up_nano / up_peft
+
+    print("\n### Table 1 — parameter & communication efficiency (LLaVA-1.5-7B, rank 64)")
+    print(f"{'approach':<12}{'client params':>18}{'share':>9}{'uploads/round':>16}{'share':>9}")
+    print(f"{'FedNano':<12}{s['fednano_client_total']/1e6:>15.2f}M"
+          f"{100*s['fednano_client_total']/s['peft_client_total']:>8.2f}%"
+          f"{up_nano/1e6:>14.2f}M{100*up_nano/total_model:>8.3f}%")
+    print(f"{'FedDPA-F':<12}{s['peft_client_total']/1e6:>15.2f}M{100.0:>8.2f}%"
+          f"{up_peft/1e6:>14.2f}M{100*up_peft/total_model:>8.3f}%")
+    print(f"{'reduction':<12}{100*client_red:>15.1f}%{'':>9}{100*upload_red:>13.1f}%")
+    print(f"paper claims: client ↓95.7%, uploads ↓99.4%, uploads ≈1.05M (ours: {up_nano/1e6:.2f}M)")
+
+    rows = [
+        ("table1/fednano_uploads_M", 0.0, f"{up_nano/1e6:.3f}"),
+        ("table1/client_reduction_pct", 0.0, f"{100*client_red:.1f}"),
+        ("table1/upload_reduction_pct", 0.0, f"{100*upload_red:.1f}"),
+    ]
+    return rows
+
+
+if __name__ == "__main__":
+    run()

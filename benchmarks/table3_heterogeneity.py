@@ -1,0 +1,35 @@
+"""Tab. 3 — robustness under data heterogeneity: α ∈ {0.1, 5}.
+
+Paper claim validated: FedNano's advantage over FedAvg is largest in the
+strongly non-IID regime (α=0.1) and narrows when data is near-IID (α=5).
+"""
+from __future__ import annotations
+
+from benchmarks.common import csv_row, print_table, run_strategy
+
+STRATS = ["locft", "fedavg", "fedprox", "fednano"]
+
+
+def run(quick: bool = True):
+    rows_csv = []
+    gaps = {}
+    for alpha in (0.1, 5.0):
+        rows = []
+        for strat in STRATS:
+            res, dt = run_strategy("minigpt4", strat, alpha=alpha, rounds=4, seed=1)
+            rows.append((strat, res))
+            rows_csv.append(csv_row(f"table3/alpha{alpha}/{strat}", dt,
+                                    f"{res['avg_accuracy']:.4f}"))
+        print_table(f"Table 3 — MiniGPT-4-like backbone, α={alpha}", rows)
+        accs = dict((n, r["avg_accuracy"]) for n, r in rows)
+        gaps[alpha] = accs["fednano"] - accs["fedavg"]
+        print(f"    FedNano − FedAvg gap @α={alpha}: {100*gaps[alpha]:+.2f}")
+    print(f"\n    paper trend (gap larger at small α): "
+          f"gap(0.1)={100*gaps[0.1]:+.2f} vs gap(5)={100*gaps[5.0]:+.2f}")
+    rows_csv.append(csv_row("table3/gap_shrinks_with_alpha", 0.0,
+                            f"{gaps[0.1] >= gaps[5.0]}"))
+    return rows_csv
+
+
+if __name__ == "__main__":
+    run(quick=False)

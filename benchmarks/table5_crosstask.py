@@ -1,0 +1,27 @@
+"""Tab. 5 — cross-task client distribution: each of 4 clients holds a
+DIFFERENT synthetic task (A-OKVQA/OK-VQA/IconQA/GQA analogues = distinct
+task_ids with shifted answer mappings and clusters).
+
+Paper claim validated: FedNano stays best on average under task-level
+heterogeneity (FedAvg degrades hardest).
+"""
+from __future__ import annotations
+
+from benchmarks.common import csv_row, print_table, run_strategy
+
+STRATS = ["fedavg", "fedprox", "feddpa_f", "fednano"]
+
+
+def run(quick: bool = True):
+    rows_csv, rows = [], []
+    for strat in STRATS:
+        res, dt = run_strategy("minigpt4", strat, task_ids=[0, 1, 2, 3],
+                               rounds=4, seed=3)
+        rows.append((strat, res))
+        rows_csv.append(csv_row(f"table5/crosstask/{strat}", dt, f"{res['avg_accuracy']:.4f}"))
+    print_table("Table 5 — cross-task federated setup (4 distinct tasks)", rows)
+    return rows_csv
+
+
+if __name__ == "__main__":
+    run(quick=False)

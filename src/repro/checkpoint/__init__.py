@@ -1,0 +1,13 @@
+from repro.checkpoint.io import (
+    load_pytree,
+    load_server_checkpoint,
+    save_pytree,
+    save_server_checkpoint,
+)
+
+__all__ = [
+    "load_pytree",
+    "load_server_checkpoint",
+    "save_pytree",
+    "save_server_checkpoint",
+]

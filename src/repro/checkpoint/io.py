@@ -1,0 +1,75 @@
+"""Checkpointing: pytree <-> npz with path-keyed entries (no orbax offline).
+
+Saves any params/opt-state pytree; restores require the reference structure
+(standard practice — the training script always has it). Server + client
+states round-trip through ``save_server_checkpoint``/``load_server_checkpoint``.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(_path_str(p) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save_pytree(path: str, tree) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **_flatten(tree))
+
+
+def load_pytree(path: str, reference):
+    """Restore into the structure of ``reference`` (dtypes/shapes checked)."""
+    data = np.load(path, allow_pickle=False)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(reference)
+    leaves = []
+    for p, ref_leaf in flat:
+        key = "/".join(_path_str(q) for q in p)
+        if key not in data:
+            raise KeyError(f"checkpoint missing key {key!r}")
+        arr = data[key]
+        if tuple(arr.shape) != tuple(np.shape(ref_leaf)):
+            raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {np.shape(ref_leaf)}")
+        leaves.append(jax.numpy.asarray(arr, dtype=np.asarray(ref_leaf).dtype))
+    return jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(reference), leaves)
+
+
+def save_server_checkpoint(dirpath: str, server, round_idx: int) -> None:
+    os.makedirs(dirpath, exist_ok=True)
+    save_pytree(os.path.join(dirpath, "backbone.npz"), server.backbone)
+    save_pytree(os.path.join(dirpath, "global_adapters.npz"), server.global_adapters)
+    meta = {"round_idx": round_idx, "cfg_name": server.cfg.name}
+    with open(os.path.join(dirpath, "meta.json"), "w") as f:
+        json.dump(meta, f)
+
+
+def load_server_checkpoint(dirpath: str, server):
+    import dataclasses
+
+    backbone = load_pytree(os.path.join(dirpath, "backbone.npz"), server.backbone)
+    adapters = load_pytree(os.path.join(dirpath, "global_adapters.npz"), server.global_adapters)
+    with open(os.path.join(dirpath, "meta.json")) as f:
+        meta = json.load(f)
+    return dataclasses.replace(
+        server, backbone=backbone, global_adapters=adapters, round_idx=meta["round_idx"]
+    ), meta

@@ -1,0 +1,41 @@
+"""whisper-base — encoder-decoder audio backbone, conv frontend STUBBED.
+
+[arXiv:2212.04356] 6 encoder + 6 decoder layers, d_model=512, 8 heads (MHA),
+d_ff=2048, vocab=51865, learned positions, LayerNorm + GELU MLP,
+encoder memory fixed at 1500 frames.
+
+Per the assignment carve-out the mel-spectrogram + conv feature extractor is
+a stub: input_specs() provides precomputed frame embeddings (1500, 512).
+NanoAdapter-I attaches to the frame embeddings (encoder side), NanoAdapter-T
+to the decoder token embeddings — the enc-dec instantiation of NanoEdge.
+
+Decode shapes use the decoder with positions extended past 448 (backbone
+stand-in semantics, see DESIGN.md §4). long_500k is skipped (fixed encoder
+context; full cross+self attention).
+
+Sharding note: 8 heads % 16 != 0 -> attention replicated on model axis;
+d_ff=2048 % 16 == 0 carries the tensor parallelism. vocab 51865 odd ->
+embedding replicated.
+"""
+from repro.configs.base import AdapterConfig, ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-base",
+        family="audio",
+        n_layers=6,           # decoder layers
+        n_enc_layers=6,
+        enc_seq_len=1500,
+        d_model=512,
+        n_heads=8,
+        n_kv_heads=8,
+        d_ff=2048,
+        vocab_size=51865,
+        max_seq_len=32768,
+        pos_type="learned",
+        norm="layernorm",
+        act="gelu",
+        frontend_dim=512,
+        adapter=AdapterConfig(rank=64, alpha=128.0, modalities=("text", "image")),
+    )

@@ -1,0 +1,49 @@
+"""FedNano core: the paper's contribution as a composable JAX module."""
+from repro.core import adapters, aggregation, client, comm, federated, fisher, server, split, types
+from repro.core.adapters import (
+    fednano_loss,
+    init_nano_adapter,
+    init_nanoedge,
+    nano_adapter_apply,
+    nanoedge_forward,
+)
+from repro.core.aggregation import STRATEGIES, aggregate, fedavg, fisher_merge
+from repro.core.client import ClientState, HyperParams, init_client, local_update
+from repro.core.federated import FederatedResult, run_centralized, run_federated
+from repro.core.fisher import FisherAccumulator, fisher_pass
+from repro.core.server import ServerState, init_server, server_aggregate
+from repro.core.types import Batch
+
+__all__ = [
+    "adapters",
+    "aggregation",
+    "client",
+    "comm",
+    "federated",
+    "fisher",
+    "server",
+    "split",
+    "types",
+    "fednano_loss",
+    "init_nano_adapter",
+    "init_nanoedge",
+    "nano_adapter_apply",
+    "nanoedge_forward",
+    "STRATEGIES",
+    "aggregate",
+    "fedavg",
+    "fisher_merge",
+    "ClientState",
+    "HyperParams",
+    "init_client",
+    "local_update",
+    "FederatedResult",
+    "run_centralized",
+    "run_federated",
+    "FisherAccumulator",
+    "fisher_pass",
+    "ServerState",
+    "init_server",
+    "server_aggregate",
+    "Batch",
+]

@@ -1,0 +1,240 @@
+"""Client-side local tuning (Alg. 1, ClientUpdate).
+
+Each client trains ONLY its NanoAdapters (optionally a dual local adapter for
+the FedDPA-F baseline). The backbone is a frozen constant — gradients are
+taken w.r.t. the adapter pytree alone, so the server-hosted LLM weights are
+never perturbed and nothing model-sized is ever shipped.
+
+Strategy-specific behaviour:
+    fednano     adamw on adapters; dedicated Fisher pass after local training
+    fednano_ef  same, but the FIM is accumulated from training-step grads
+                (zero extra passes — paper Tab. 7 trade-off)
+    fedavg      plain local adamw
+    fedprox     + (μ/2)·‖θ − θ_global‖² proximal term in the local loss
+    feddpa_f    dual adapters: frozen personal adapter (trained in round 1
+                only) composed after the shared global adapter
+    locft       local-only; no upload, no download after round 0
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import adapters as adapters_lib
+from repro.core.fisher import FisherAccumulator, fisher_pass
+from repro.core.types import Batch
+from repro.optim import adamw_init, adamw_update
+from repro.utils import tree_sq_norm, tree_sub
+
+
+@dataclass(frozen=True)
+class HyperParams:
+    lr: float = 1e-3
+    weight_decay: float = 0.0
+    grad_clip: float = 1.0
+    local_steps: int = 10          # T local steps per round (paper: 1 epoch)
+    prox_mu: float = 0.01          # FedProx proximal coefficient
+    fisher_batches: int = 4        # batches for the dedicated FIM pass
+    dpa_warmup_rounds: int = 1     # FedDPA-F: rounds that train the local adapter
+    # --- beyond-paper extensions (repro.core.{compression,privacy}) ---
+    compress_uploads: bool = False # int8 delta quantization + error feedback
+    dp_clip: float = 0.0           # client-level DP: L2 clip of the delta (0 = off)
+    dp_noise: float = 0.0          # client-level DP: Gaussian noise multiplier
+
+
+@dataclass
+class ClientState:
+    cid: int
+    adapters: Dict            # global/shared NanoAdapters (uploaded)
+    opt_state: Any
+    n_examples: int
+    local_adapters: Optional[Dict] = None   # FedDPA-F personal adapter
+    fisher: Optional[Dict] = None           # last computed diagonal FIM
+    ef_acc: Optional[FisherAccumulator] = None
+    comp_error: Optional[Dict] = None       # int8-compression error feedback
+
+
+def init_client(key, cfg, cid: int, n_examples: int, strategy: str) -> ClientState:
+    k1, k2 = jax.random.split(key)
+    adp = adapters_lib.init_nanoedge(k1, cfg)
+    local = adapters_lib.init_nanoedge(k2, cfg) if strategy == "feddpa_f" else None
+    return ClientState(
+        cid=cid,
+        adapters=adp,
+        opt_state=adamw_init(adp),
+        n_examples=n_examples,
+        local_adapters=local,
+    )
+
+
+def _combined_loss(cfg, backbone, adapters, local_adapters, batch):
+    """FedDPA composition: shared adapter then personal adapter."""
+    if local_adapters is None:
+        return adapters_lib.fednano_loss(cfg, backbone, adapters, batch)
+    # compose: run NanoEdge with the shared adapters, then apply the personal
+    # adapters on the resulting embeddings (dual-adapter design).
+    embeds, positions, labels, mask, enc = adapters_lib.nanoedge_forward(
+        cfg, backbone, adapters, batch
+    )
+    kw = dict(rank=cfg.adapter.rank, alpha=cfg.adapter.alpha, use_pallas=cfg.use_pallas)
+    if "text" in local_adapters:
+        embeds = adapters_lib.nano_adapter_apply(local_adapters["text"], embeds, **kw)
+    if enc is not None and "image" in local_adapters:
+        enc = adapters_lib.nano_adapter_apply(local_adapters["image"], enc, **kw)
+    from repro.models import model as model_lib
+
+    loss, aux = model_lib.loss_fn(cfg, backbone, embeds, positions, labels, mask, enc)
+    return loss, aux
+
+
+@functools.lru_cache(maxsize=64)
+def make_train_step(cfg, strategy: str, hp: HyperParams) -> Callable:
+    """Jitted local train step, shared across clients (compiled once)."""
+
+    def step(backbone, adapters, local_adapters, opt_state, batch, global_ref, ef_sum, ef_cnt):
+        def loss_fn(adp):
+            loss, aux = _combined_loss(cfg, backbone, adp, local_adapters, batch)
+            if strategy == "fedprox":
+                loss = loss + 0.5 * hp.prox_mu * tree_sq_norm(tree_sub(adp, global_ref))
+            return loss, aux
+
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(adapters)
+        new_adapters, new_opt = adamw_update(
+            grads, opt_state, adapters,
+            lr=hp.lr, weight_decay=hp.weight_decay, grad_clip=hp.grad_clip,
+        )
+        # streaming (EF) Fisher accumulation — free squared grads
+        new_ef_sum = jax.tree.map(
+            lambda s, g: s + jnp.square(g.astype(s.dtype)), ef_sum, grads
+        )
+        return new_adapters, new_opt, loss, new_ef_sum, ef_cnt + 1.0
+
+    return jax.jit(step)
+
+
+@functools.lru_cache(maxsize=64)
+def make_fisher_grad(cfg) -> Callable:
+    """grad of the plain task loss (no prox) — used by the dedicated FIM pass."""
+
+    def gfn(backbone, adapters, batch):
+        def loss_fn(adp):
+            loss, _ = adapters_lib.fednano_loss(cfg, backbone, adp, batch)
+            return loss
+
+        return jax.grad(loss_fn)(adapters)
+
+    return jax.jit(gfn)
+
+
+@functools.lru_cache(maxsize=64)
+def make_local_adapter_step(cfg, hp: HyperParams) -> Callable:
+    """FedDPA-F warmup: train the PERSONAL adapter (shared adapter frozen)."""
+
+    def step(backbone, adapters, local_adapters, opt_state, batch):
+        def loss_fn(ladp):
+            loss, _ = _combined_loss(cfg, backbone, adapters, ladp, batch)
+            return loss
+
+        loss, grads = jax.value_and_grad(loss_fn)(local_adapters)
+        new_local, new_opt = adamw_update(
+            grads, opt_state, local_adapters, lr=hp.lr, grad_clip=hp.grad_clip
+        )
+        return new_local, new_opt, loss
+
+    return jax.jit(step)
+
+
+def local_update(
+    cfg,
+    backbone,
+    state: ClientState,
+    batches: List[Batch],
+    hp: HyperParams,
+    strategy: str,
+    global_adapters,
+    round_idx: int,
+) -> Tuple[ClientState, Dict]:
+    """Run T local steps (+ FIM estimation) for one client. Returns metrics."""
+    # round start: adopt the global adapters (Alg. 1 ClientUpdate line 1);
+    # LocFT never re-downloads after initialization.
+    if strategy == "locft" and round_idx > 0:
+        adapters = state.adapters
+    else:
+        adapters = jax.tree.map(jnp.copy, global_adapters)
+    opt_state = state.opt_state
+
+    # FedDPA-F: personal-adapter warmup rounds
+    local_adapters = state.local_adapters
+    if strategy == "feddpa_f" and round_idx < hp.dpa_warmup_rounds:
+        lstep = make_local_adapter_step(cfg, hp)
+        lopt = adamw_init(local_adapters)
+        for batch in batches[: hp.local_steps]:
+            local_adapters, lopt, _ = lstep(backbone, adapters, local_adapters, lopt, batch)
+
+    step_fn = make_train_step(cfg, strategy, hp)
+    ef_sum = jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), adapters)
+    ef_cnt = jnp.zeros((), jnp.float32)
+    losses = []
+    for t in range(hp.local_steps):
+        batch = batches[t % len(batches)]
+        adapters, opt_state, loss, ef_sum, ef_cnt = step_fn(
+            backbone, adapters, local_adapters, opt_state, batch, global_adapters,
+            ef_sum, ef_cnt,
+        )
+        losses.append(float(loss))
+
+    fisher = None
+    if strategy == "fednano":
+        gfn = make_fisher_grad(cfg)
+        fisher = fisher_pass(
+            lambda adp, b: gfn(backbone, adp, b),
+            adapters,
+            batches[: hp.fisher_batches],
+        )
+    elif strategy == "fednano_ef":
+        acc = FisherAccumulator(sum_sq=ef_sum, count=ef_cnt)
+        fisher = acc.finalize()
+
+    new_state = dataclasses.replace(
+        state,
+        adapters=adapters,
+        opt_state=opt_state,
+        local_adapters=local_adapters,
+        fisher=fisher,
+    )
+    metrics = {"loss_first": losses[0], "loss_last": losses[-1], "loss_mean": sum(losses) / len(losses)}
+    return new_state, metrics
+
+
+@functools.lru_cache(maxsize=64)
+def _make_eval_fn(cfg, has_local: bool) -> Callable:
+    def acc_fn(backbone, adapters, local_adapters, batch):
+        embeds, positions, labels, mask, enc = adapters_lib.nanoedge_forward(
+            cfg, backbone, adapters, batch
+        )
+        if has_local:
+            kw = dict(rank=cfg.adapter.rank, alpha=cfg.adapter.alpha, use_pallas=False)
+            if "text" in local_adapters:
+                embeds = adapters_lib.nano_adapter_apply(local_adapters["text"], embeds, **kw)
+            if enc is not None and "image" in local_adapters:
+                enc = adapters_lib.nano_adapter_apply(local_adapters["image"], enc, **kw)
+        from repro.models import model as model_lib
+        from repro.models.layers import token_accuracy
+
+        hidden, _ = model_lib.forward(cfg, backbone, embeds, positions, enc)
+        lg = model_lib.logits(cfg, backbone, hidden)
+        return token_accuracy(lg, labels, mask)
+
+    return jax.jit(acc_fn)
+
+
+def eval_client(cfg, backbone, adapters, local_adapters, batches: List[Batch]) -> float:
+    """Answer-token accuracy under teacher forcing (the VQA-accuracy proxy)."""
+    acc_fn = _make_eval_fn(cfg, local_adapters is not None)
+    accs = [float(acc_fn(backbone, adapters, local_adapters, b)) for b in batches]
+    return sum(accs) / max(len(accs), 1)

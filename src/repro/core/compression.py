@@ -1,0 +1,79 @@
+"""Upload compression: int8 quantization of adapter deltas + error feedback.
+
+Beyond-paper extension along the paper's own axis (communication): the
+NanoAdapter *delta* (θ_k − θ_global) is what carries information each round;
+quantizing it to int8 with per-leaf scales cuts the parameter-plane upload
+another 4× below the paper's 0.01 % (fp32 → int8), and the classic error-
+feedback accumulator (Seide et al. 2014; Karimireddy et al. 2019) keeps the
+compression *unbiased over time*: the residual each round is added back into
+the next round's delta before quantization.
+
+Wire format per leaf: int8 payload + one fp32 scale (amortized ≈ 0).
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import tree_sub, tree_add, tree_zeros_like
+
+
+class QuantizedDelta(NamedTuple):
+    payload: Dict    # int8 pytree
+    scales: Dict     # fp32 scalars pytree
+    base_bytes: int  # bytes of the uncompressed fp32 delta
+    wire_bytes: int  # bytes actually on the wire
+
+
+def _quant_leaf(x):
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dequant_leaf(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def quantize_delta(delta) -> QuantizedDelta:
+    qs = jax.tree.map(_quant_leaf, delta)
+    payload = jax.tree.map(lambda t: t[0], qs, is_leaf=lambda t: isinstance(t, tuple))
+    scales = jax.tree.map(lambda t: t[1], qs, is_leaf=lambda t: isinstance(t, tuple))
+    from repro.utils import tree_bytes, tree_size
+
+    base = tree_bytes(delta)
+    wire = tree_size(delta) * 1 + 4 * len(jax.tree.leaves(scales))
+    return QuantizedDelta(payload=payload, scales=scales, base_bytes=base, wire_bytes=wire)
+
+
+def dequantize_delta(q: QuantizedDelta):
+    return jax.tree.map(_dequant_leaf, q.payload, q.scales)
+
+
+def compress_update(
+    adapters, global_ref, error_acc: Optional[Dict] = None
+) -> Tuple[QuantizedDelta, Dict, Dict]:
+    """Client side: delta = (θ_k − θ_global) + error_feedback; quantize.
+
+    Returns (wire message, new error accumulator, exact reconstruction the
+    SERVER will see — useful for tests/aggregation without re-decoding).
+    """
+    delta = tree_sub(adapters, global_ref)
+    if error_acc is not None:
+        delta = tree_add(delta, error_acc)
+    q = quantize_delta(delta)
+    recon = dequantize_delta(q)
+    new_error = tree_sub(delta, recon)  # what got lost this round
+    return q, new_error, recon
+
+
+def apply_update(global_ref, recon_delta):
+    """Server side: θ_k as seen by the aggregator."""
+    return tree_add(global_ref, jax.tree.map(lambda a, b: a.astype(b.dtype) if hasattr(a, "astype") else a, recon_delta, global_ref))
+
+
+def init_error_feedback(adapters) -> Dict:
+    return tree_zeros_like(adapters)

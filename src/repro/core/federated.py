@@ -1,0 +1,159 @@
+"""Federated orchestration — Alg. 1 of the paper, end to end.
+
+``run_federated`` drives R communication rounds over K clients for any
+strategy in {fednano, fednano_ef, fedavg, fedprox, feddpa_f, locft}, plus a
+``centralized`` upper-bound runner. Clients execute sequentially in this
+process (one CPU); on the production mesh the server step batches all
+clients' activations across the ``data``/``pod`` axes (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+
+from repro.core import client as client_lib
+from repro.core import server as server_lib
+from repro.core.client import ClientState, HyperParams
+from repro.core.types import Batch
+
+
+@dataclass
+class FederatedResult:
+    strategy: str
+    round_metrics: List[Dict] = field(default_factory=list)
+    client_accuracy: Dict[int, float] = field(default_factory=dict)
+    avg_accuracy: float = 0.0
+    comm_totals: Dict[str, int] = field(default_factory=dict)
+    server: Optional[object] = None
+    clients: Optional[List[ClientState]] = None
+
+
+def run_federated(
+    key,
+    cfg,
+    train_data: Dict[int, List[Batch]],
+    eval_data: Dict[int, List[Batch]],
+    *,
+    strategy: str = "fednano",
+    rounds: int = 10,
+    hp: HyperParams = HyperParams(),
+    use_pallas: bool = False,
+    server: Optional[server_lib.ServerState] = None,
+    verbose: bool = False,
+) -> FederatedResult:
+    """Run R rounds of federated NanoAdapter tuning."""
+    k_server, k_clients = jax.random.split(key)
+    if server is None:
+        server = server_lib.init_server(k_server, cfg)
+    cids = sorted(train_data)
+    ckeys = jax.random.split(k_clients, len(cids))
+    clients = [
+        client_lib.init_client(ck, cfg, cid, n_examples=len(train_data[cid]), strategy=strategy)
+        for ck, cid in zip(ckeys, cids)
+    ]
+
+    result = FederatedResult(strategy=strategy)
+    wire_up_total = 0
+    for r in range(rounds):
+        thetas, fishers, sizes, losses = [], [], [], []
+        for i, cid in enumerate(cids):
+            clients[i], metrics = client_lib.local_update(
+                cfg,
+                server.backbone,
+                clients[i],
+                train_data[cid],
+                hp,
+                strategy,
+                server.global_adapters,
+                round_idx=r,
+            )
+            theta = clients[i].adapters
+            # --- beyond-paper upload path: DP then int8+error-feedback ---
+            if hp.dp_clip > 0.0:
+                from repro.core.privacy import privatize_update
+
+                dpk = jax.random.fold_in(jax.random.PRNGKey(1234 + cid), r)
+                theta, _ = privatize_update(
+                    dpk, theta, server.global_adapters,
+                    clip_norm=hp.dp_clip, noise_mult=hp.dp_noise,
+                )
+            if hp.compress_uploads:
+                from repro.core.compression import (
+                    compress_update,
+                    init_error_feedback,
+                )
+                from repro.utils import tree_add
+
+                err = clients[i].comp_error or init_error_feedback(theta)
+                q, err, recon = compress_update(theta, server.global_adapters, err)
+                clients[i].comp_error = err
+                theta = tree_add(server.global_adapters, recon)
+                wire_up_total += q.wire_bytes
+            thetas.append(theta)
+            fishers.append(clients[i].fisher)
+            sizes.append(clients[i].n_examples)
+            losses.append(metrics["loss_mean"])
+        if strategy != "locft":
+            server = server_lib.server_aggregate(
+                server, strategy, thetas, fishers, sizes, use_pallas=use_pallas
+            )
+        rm = {"round": r, "mean_loss": sum(losses) / len(losses)}
+        result.round_metrics.append(rm)
+        if verbose:
+            print(f"  [{strategy}] round {r}: mean local loss {rm['mean_loss']:.4f}")
+
+    # final evaluation: each client evaluates the GLOBAL adapters on its own
+    # held-out split (LocFT/FedDPA-F evaluate their personalized params).
+    for i, cid in enumerate(cids):
+        if strategy == "locft":
+            adp, ladp = clients[i].adapters, None
+        elif strategy == "feddpa_f":
+            adp, ladp = server.global_adapters, clients[i].local_adapters
+        else:
+            adp, ladp = server.global_adapters, None
+        acc = client_lib.eval_client(cfg, server.backbone, adp, ladp, eval_data[cid])
+        result.client_accuracy[cid] = acc
+    result.avg_accuracy = sum(result.client_accuracy.values()) / len(cids)
+    result.comm_totals = server.comm.totals()
+    if hp.compress_uploads:
+        result.comm_totals["param_up_wire"] = wire_up_total
+    result.server = server
+    result.clients = clients
+    return result
+
+
+def run_centralized(
+    key,
+    cfg,
+    train_data: Dict[int, List[Batch]],
+    eval_data: Dict[int, List[Batch]],
+    *,
+    steps: int = 100,
+    hp: HyperParams = HyperParams(),
+    verbose: bool = False,
+) -> FederatedResult:
+    """Upper bound: one 'client' holding the union of all data."""
+    all_train: List[Batch] = []
+    for cid in sorted(train_data):
+        all_train.extend(train_data[cid])
+    server = server_lib.init_server(key, cfg)
+    state = client_lib.init_client(key, cfg, cid=0, n_examples=len(all_train), strategy="fedavg")
+    hp_c = HyperParams(
+        lr=hp.lr, weight_decay=hp.weight_decay, grad_clip=hp.grad_clip,
+        local_steps=steps, prox_mu=hp.prox_mu, fisher_batches=hp.fisher_batches,
+    )
+    state, metrics = client_lib.local_update(
+        cfg, server.backbone, state, all_train, hp_c, "fedavg",
+        server.global_adapters, round_idx=0,
+    )
+    result = FederatedResult(strategy="centralized")
+    result.round_metrics.append({"round": 0, "mean_loss": metrics["loss_mean"]})
+    for cid in sorted(eval_data):
+        acc = client_lib.eval_client(cfg, server.backbone, state.adapters, None, eval_data[cid])
+        result.client_accuracy[cid] = acc
+    result.avg_accuracy = sum(result.client_accuracy.values()) / len(result.client_accuracy)
+    if verbose:
+        print(f"  [centralized] acc {result.avg_accuracy:.4f}")
+    return result

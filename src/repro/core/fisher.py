@@ -1,0 +1,63 @@
+"""Diagonal Fisher information for NanoAdapter params (paper §3.4).
+
+The FIM serves as the precision matrix of the Laplace approximation to the
+client posterior. FedNano approximates the full FIM by its diagonal
+(Kirkpatrick et al. 2017) computed from squared gradients (Wu et al. 2023):
+
+    F ≈ E_{(v,q,a)~D_k} [ (∇_θ log p(a|v,q,θ))² ]
+
+Two estimators (paper §4.4, Tab. 7):
+  * dedicated pass (``fisher_pass``) — extra fwd+bwd per round on local data
+    with the *final* local params: precise, the default FedNano.
+  * streaming / "EF" (``FisherAccumulator`` fed during training) — reuses the
+    squared grads of normal training steps: zero extra compute, slightly
+    stale (averaged over the local trajectory). FedNano-EF.
+"""
+from __future__ import annotations
+
+from typing import Callable, Iterable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import tree_zeros_like
+
+
+class FisherAccumulator(NamedTuple):
+    sum_sq: dict   # Σ grad² pytree (adapter structure)
+    count: jax.Array  # number of accumulated gradient evaluations
+
+    @staticmethod
+    def init(adapters) -> "FisherAccumulator":
+        return FisherAccumulator(
+            sum_sq=tree_zeros_like(adapters), count=jnp.zeros((), jnp.float32)
+        )
+
+    def update(self, grads) -> "FisherAccumulator":
+        new = jax.tree.map(lambda s, g: s + jnp.square(g.astype(s.dtype)), self.sum_sq, grads)
+        return FisherAccumulator(sum_sq=new, count=self.count + 1.0)
+
+    def finalize(self, eps: float = 1e-8):
+        """Mean squared gradient (diagonal FIM estimate)."""
+        c = jnp.maximum(self.count, 1.0)
+        return jax.tree.map(lambda s: s / c + eps, self.sum_sq)
+
+
+def fisher_pass(
+    grad_fn: Callable, adapters, batches: Iterable, *, eps: float = 1e-8
+):
+    """Dedicated FIM pass: Σ over batches of grad(loss)² at fixed params.
+
+    grad_fn(adapters, batch) -> grads pytree (same structure as adapters).
+    """
+    acc = FisherAccumulator.init(adapters)
+    for batch in batches:
+        grads = grad_fn(adapters, batch)
+        acc = acc.update(grads)
+    return acc.finalize(eps=eps)
+
+
+def fisher_size_bytes(fisher) -> int:
+    from repro.utils import tree_bytes
+
+    return tree_bytes(fisher)

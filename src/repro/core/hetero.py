@@ -1,0 +1,76 @@
+"""Heterogeneous NanoAdapter ranks across clients.
+
+Addresses the paper's FIRST stated limitation ("the assumption that all
+clients possess similar hardware capabilities … future research could
+explore adaptive mechanisms that dynamically adjust NanoAdapter
+configurations to fit each client's resource constraints").
+
+Design: client k trains rank-r_k adapters (r_k ≤ R_max); aggregation embeds
+every update into the rank-R_max parameter space by zero-padding the extra
+rank rows/columns, then Fisher-merges there. Zero-padding is *exactly*
+correct for LoRA composition: a rank-r pair (down ∈ D×r, up ∈ r×D) padded to
+R produces the identical adapter function (the padded rows of `up` are zero,
+so the padded columns of `down` are inert), and its diagonal Fisher is zero
+on the padding — Fisher merging then automatically gives those coordinates
+zero weight for that client. Each client downloads the merged rank-R
+adapters truncated back to its own rank (the leading-R′ sub-pair), i.e. a
+server-side rank *projection*.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aggregation import fisher_merge
+
+
+def pad_adapter(adapter: Dict, rank_max: int) -> Dict:
+    """{'down': (D, r), 'up': (r, D)} -> rank_max-padded pair (same function)."""
+    down, up = adapter["down"], adapter["up"]
+    r = down.shape[1]
+    if r == rank_max:
+        return adapter
+    assert r < rank_max, (r, rank_max)
+    pad = rank_max - r
+    return {
+        "down": jnp.pad(down, ((0, 0), (0, pad))),
+        "up": jnp.pad(up, ((0, pad), (0, 0))),
+    }
+
+
+def truncate_adapter(adapter: Dict, rank: int) -> Dict:
+    return {"down": adapter["down"][:, :rank], "up": adapter["up"][:rank, :]}
+
+
+def pad_nanoedge(adapters: Dict, rank_max: int) -> Dict:
+    return {mod: pad_adapter(a, rank_max) for mod, a in adapters.items()}
+
+
+def truncate_nanoedge(adapters: Dict, rank: int) -> Dict:
+    return {mod: truncate_adapter(a, rank) for mod, a in adapters.items()}
+
+
+def hetero_fisher_merge(
+    thetas: List[Dict],
+    fishers: List[Dict],
+    ranks: Sequence[int],
+    data_sizes: Optional[Sequence[float]] = None,
+    *,
+    rank_max: Optional[int] = None,
+):
+    """Fisher-merge rank-heterogeneous NanoEdge updates in rank-R_max space.
+
+    fishers may be None per-client (falls back to ones on the client's live
+    coordinates — still zero on padding, preserving the correctness above).
+    Returns the merged rank-R_max NanoEdge.
+    """
+    rmax = rank_max or max(ranks)
+    padded_t, padded_f = [], []
+    for theta, fisher, r in zip(thetas, fishers, ranks):
+        padded_t.append(pad_nanoedge(theta, rmax))
+        if fisher is None:
+            fisher = jax.tree.map(jnp.ones_like, theta)
+        padded_f.append(pad_nanoedge(fisher, rmax))
+    return fisher_merge(padded_t, padded_f, data_sizes)

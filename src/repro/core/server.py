@@ -1,0 +1,62 @@
+"""Server state: the frozen LLM + global NanoAdapters (Alg. 1, ServerUpdate).
+
+In a real deployment this process owns the TPU mesh; ``repro.launch`` wires
+the same functions under pjit. Here the server also performs Fisher-guided
+aggregation and tracks communication.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+
+from repro.core import adapters as adapters_lib
+from repro.core.aggregation import aggregate
+from repro.core.comm import CommLog, RoundTraffic
+from repro.models import model as model_lib
+from repro.utils import tree_bytes
+
+
+@dataclass
+class ServerState:
+    cfg: object
+    backbone: Dict                  # frozen — never updated after init
+    global_adapters: Dict           # current θ_global
+    comm: CommLog = field(default_factory=CommLog)
+    round_idx: int = 0
+
+
+def init_server(key, cfg) -> ServerState:
+    kb, ka = jax.random.split(key)
+    backbone = model_lib.init_backbone(kb, cfg)
+    global_adapters = adapters_lib.init_nanoedge(ka, cfg)
+    return ServerState(cfg=cfg, backbone=backbone, global_adapters=global_adapters)
+
+
+def server_aggregate(
+    server: ServerState,
+    strategy: str,
+    thetas: List[Dict],
+    fishers: Optional[List[Dict]],
+    data_sizes: List[int],
+    *,
+    use_pallas: bool = False,
+) -> ServerState:
+    """Alg. 1 line 7: θ_global <- ServerAgg({θ_k, F_k})."""
+    merged = aggregate(strategy, thetas, fishers, data_sizes, use_pallas=use_pallas)
+    traffic = RoundTraffic(
+        round_idx=server.round_idx,
+        param_up=sum(tree_bytes(t) for t in thetas),
+        fisher_up=sum(tree_bytes(f) for f in fishers) if fishers and fishers[0] is not None else 0,
+        param_down=tree_bytes(merged) * len(thetas) if merged is not None else 0,
+    )
+    comm = server.comm
+    comm.log_round(traffic)
+    return dataclasses.replace(
+        server,
+        global_adapters=merged if merged is not None else server.global_adapters,
+        comm=comm,
+        round_idx=server.round_idx + 1,
+    )

@@ -1,0 +1,125 @@
+"""Split-learning runtime — the mechanics FedNano's Alg. 1 leaves implicit.
+
+The client cannot backprop through a server-hosted LLM, so each local step is
+a three-message exchange (DESIGN.md §1):
+
+    1. client:  NanoEdge forward  ->  adapted embeddings E            (up)
+    2. server:  frozen-LLM fwd+bwd ->  loss, ∂loss/∂E                 (down)
+    3. client:  adapter backward through NanoEdge -> adapter grads    (local)
+
+``jax.vjp`` gives us exactly this factorization: the server half is a VJP of
+the backbone loss w.r.t. its *inputs* (never its weights — the backbone stays
+frozen); the client half is a VJP of NanoEdge w.r.t. the adapters, seeded
+with the server's cotangent. The composition is mathematically identical to
+end-to-end ``jax.grad`` over the fused loss (tested in tests/test_split.py),
+while every cross-machine tensor is explicit and byte-accounted.
+
+The server step is also the unit that the multi-pod dry-run lowers: a frozen
+backbone fwd+bwd over a many-client activation batch.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import adapters as adapters_lib
+from repro.core.types import Batch
+from repro.models import model as model_lib
+from repro.utils import tree_bytes
+
+
+# ---------------------------------------------------------------------------
+# client half
+# ---------------------------------------------------------------------------
+
+def client_forward(cfg, backbone_client_side, adapters, batch: Batch):
+    """NanoEdge forward. ``backbone_client_side`` holds the frozen pieces the
+    client owns (token embedder, connector) — a subset of the server params
+    in this simulation, a separate copy on a real device."""
+    return adapters_lib.nanoedge_forward(cfg, backbone_client_side, adapters, batch)
+
+
+def client_forward_vjp(cfg, backbone_client_side, adapters, batch: Batch):
+    """Returns (wire activations, vjp closure over the adapters)."""
+
+    def fwd(adp):
+        embeds, positions, labels, mask, enc = adapters_lib.nanoedge_forward(
+            cfg, backbone_client_side, adp, batch
+        )
+        wire = (embeds, enc) if enc is not None else (embeds,)
+        return wire, (positions, labels, mask)
+
+    wire, vjp_fn, (positions, labels, mask) = jax.vjp(fwd, adapters, has_aux=True)
+    embeds = wire[0]
+    enc = wire[1] if len(wire) > 1 else None
+    return (embeds, positions, labels, mask, enc), vjp_fn
+
+
+# ---------------------------------------------------------------------------
+# server half
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=64)
+def make_server_step(cfg) -> Callable:
+    """Jitted frozen-backbone fwd+bwd w.r.t. the INPUT activations.
+
+    (backbone, embeds, positions, labels, mask, enc) ->
+        (loss, d_embeds, d_enc)
+    """
+
+    def server_step(backbone, embeds, positions, labels, mask, enc):
+        if enc is not None:
+            def f(e, en):
+                loss, _ = model_lib.loss_fn(cfg, backbone, e, positions, labels, mask, en)
+                return loss
+
+            loss, grads = jax.value_and_grad(f, argnums=(0, 1))(embeds, enc)
+            return loss, grads[0], grads[1]
+
+        def f(e):
+            loss, _ = model_lib.loss_fn(cfg, backbone, e, positions, labels, mask, None)
+            return loss
+
+        loss, d_embeds = jax.value_and_grad(f)(embeds)
+        return loss, d_embeds, None
+
+    return jax.jit(server_step, static_argnames=())
+
+
+# ---------------------------------------------------------------------------
+# full split step (simulated exchange, byte-accounted)
+# ---------------------------------------------------------------------------
+
+def split_train_grads(cfg, backbone, adapters, batch: Batch):
+    """One split-learning gradient computation.
+
+    Returns (loss, adapter_grads, traffic_bytes: dict). Must equal the fused
+    ``jax.grad(fednano_loss)`` — the equivalence test for the runtime.
+    """
+    (embeds, positions, labels, mask, enc), vjp_fn = client_forward_vjp(
+        cfg, backbone, adapters, batch
+    )
+    server_step = make_server_step(cfg)
+    loss, d_embeds, d_enc = server_step(backbone, embeds, positions, labels, mask, enc)
+
+    if enc is not None:
+        (adapter_grads,) = vjp_fn((d_embeds, d_enc))
+        act_up = tree_bytes(embeds) + tree_bytes(enc)
+        act_down = tree_bytes(d_embeds) + tree_bytes(d_enc)
+    else:
+        (adapter_grads,) = vjp_fn((d_embeds,))
+        act_up = tree_bytes(embeds)
+        act_down = tree_bytes(d_embeds)
+
+    traffic = {"act_up": act_up, "act_down": act_down}
+    return loss, adapter_grads, traffic
+
+
+def split_activation_bytes_per_step(cfg, batch_size: int, seq_len: int) -> dict:
+    """Analytic per-step activation traffic (both directions), bytes."""
+    itemsize = jnp.dtype(cfg.dtype).itemsize
+    act = batch_size * seq_len * cfg.d_model * itemsize
+    return {"act_up": act, "act_down": act}

@@ -1,0 +1,21 @@
+"""Shared datatypes for the FedNano core."""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+
+
+class Batch(NamedTuple):
+    """One multimodal VQA batch (image-question-answer triplets).
+
+    tokens  (B, S) int32   — question+answer token ids (client tokenizer)
+    labels  (B, S) int32   — next-token targets (shifted)
+    mask    (B, S) f32     — 1.0 on supervised (answer) positions
+    patches (B, M, F) f32  — stubbed frontend patch/frame embeddings, or None
+    """
+
+    tokens: jax.Array
+    labels: jax.Array
+    mask: jax.Array
+    patches: Optional[jax.Array] = None

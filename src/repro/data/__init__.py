@@ -1,0 +1,14 @@
+from repro.data.partition import dirichlet_partition, partition_stats
+from repro.data.pipeline import examples_to_batches, make_federated_data
+from repro.data.synthetic import Example, SyntheticVQA
+from repro.data.tokenizer import ToyTokenizer
+
+__all__ = [
+    "dirichlet_partition",
+    "partition_stats",
+    "examples_to_batches",
+    "make_federated_data",
+    "Example",
+    "SyntheticVQA",
+    "ToyTokenizer",
+]

@@ -1,0 +1,23 @@
+"""Jitted public wrapper for the Fisher-merge kernel (arbitrary leaf shapes)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.fisher_merge.fisher_merge import fisher_merge_2d
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_n", "interpret"))
+def fisher_merge(theta, fisher, weights, *, eps: float = 1e-8,
+                 block_n: int = 1024, interpret: bool = False):
+    """theta/fisher (K, ...) stacked client leaves; weights (K,).
+
+    Returns the merged leaf of shape (...).
+    """
+    k = theta.shape[0]
+    rest = theta.shape[1:]
+    t = theta.reshape(k, -1)
+    f = fisher.reshape(k, -1)
+    out = fisher_merge_2d(t, f, weights, eps=eps, block_n=block_n, interpret=interpret)
+    return out.reshape(rest)

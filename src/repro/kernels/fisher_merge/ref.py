@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the Fisher-merge kernel (paper Eq. 1, elementwise)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fisher_merge(theta, fisher, weights, *, eps: float = 1e-8):
+    """theta/fisher (K, N); weights (K,) -> merged (N,).
+
+    out = Σ_k w_k F_k θ_k / (Σ_k w_k F_k + eps)
+    """
+    t = theta.astype(jnp.float32)
+    f = fisher.astype(jnp.float32)
+    w = weights.astype(jnp.float32)[:, None]
+    num = jnp.sum(w * f * t, axis=0)
+    den = jnp.sum(w * f, axis=0)
+    return (num / (den + eps)).astype(theta.dtype)

@@ -1,0 +1,139 @@
+"""Blockwise flash attention — Pallas TPU kernel.
+
+TPU-native online-softmax attention (the SDPA replacement, DESIGN.md §3):
+
+  * grid (B, H, nQ, nK) — the nK axis is innermost and sequential on a TPU
+    core, so the running max/denominator/accumulator live in VMEM scratch
+    and carry across k-steps; they are initialized at k==0 and the output
+    tile is written once at the final k-step (classic two-pass-free form).
+  * GQA-aware: K/V BlockSpecs index-map head h -> h // (H // Hkv), so a KV
+    head group is loaded into VMEM ONCE per Q-head — on real hardware this
+    is the bandwidth win over head-repeated SDPA.
+  * causal + sliding-window masks are applied per tile from 2D iotas;
+    grok-style tanh softcap optionally applied pre-mask.
+  * block sizes default to (128, 512) — MXU-aligned (multiples of 8×128
+    lanes) and small enough that q, k, v, acc tiles fit VMEM at head_dim 256.
+
+Numerics: all softmax state in fp32 scratch regardless of input dtype.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, window: Optional[int], softcap: float,
+            block_q: int, block_k: int, q_offset: int, n_k: int):
+    kb = pl.program_id(3)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32)   # (bq, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)   # (bk, D)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)   # (bk, D)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (bq, bk)
+    if softcap and softcap > 0.0:
+        s = jnp.tanh(s / softcap) * softcap
+
+    qb = pl.program_id(2)
+    qpos = qb * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0) + q_offset
+    kpos = kb * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = jnp.ones((block_q, block_k), jnp.bool_)
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window is not None:
+        mask = mask & (qpos - kpos < window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                           # (bq, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # guard fully-masked rows (exp(NEG_INF - NEG_INF) would be exp(0)=1)
+    p = jnp.exp(jnp.where(m_new <= NEG_INF / 2, NEG_INF, s - m_new))
+    alpha = jnp.exp(
+        jnp.where(m_prev <= NEG_INF / 2, NEG_INF, m_prev - m_new)
+    )                                             # (bq, 1)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+
+    @pl.when(kb == n_k - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q, k, v, *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: float = 0.0,
+    block_q: int = 128,
+    block_k: int = 512,
+    interpret: bool = False,
+):
+    """q (B, Sq, H, D); k, v (B, Sk, Hkv, D), H % Hkv == 0. Returns (B, Sq, H, D).
+
+    Query i has absolute position (Sk - Sq) + i (decode/prefill alignment).
+    """
+    B, Sq, H, D = q.shape
+    Bk, Sk, Hkv, Dk = k.shape
+    assert (B, D) == (Bk, Dk) and H % Hkv == 0
+    group = H // Hkv
+
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    pad_q = (-Sq) % bq
+    pad_k = (-Sk) % bk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    Sqp, Skp = q.shape[1], k.shape[1]
+    n_q, n_k = Sqp // bq, Skp // bk
+    q_offset = Sk - Sq
+
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel,
+            scale=D**-0.5,
+            causal=causal,
+            window=window,
+            softcap=softcap,
+            block_q=bq,
+            block_k=bk,
+            q_offset=q_offset,
+            n_k=n_k,
+        ),
+        grid=(B, H, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, D), lambda b, h, i, j: (b, i, h, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda b, h, i, j, g=group: (b, j, h // g, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda b, h, i, j, g=group: (b, j, h // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, D), lambda b, h, i, j: (b, i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Sqp, H, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :Sq] if pad_q else out

@@ -1,0 +1,21 @@
+"""Jitted public wrapper for the flash-attention kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention.flash_attention import flash_attention as _fa
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "block_q", "block_k", "interpret"),
+)
+def flash_attention(q, k, v, *, causal=True, window=None, softcap=0.0,
+                    block_q=128, block_k=512, interpret=False):
+    return _fa(
+        q, k, v,
+        causal=causal, window=window, softcap=softcap,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )

@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the blockwise flash-attention kernel."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
+              softcap: float = 0.0, n_kv: Optional[int] = None):
+    """q (B, Sq, H, D); k, v (B, Sk, Hkv, D) with H % Hkv == 0 (GQA).
+
+    Returns (B, Sq, H, D). Query position i is aligned so that the LAST query
+    attends to the LAST key (q_offset = Sk - Sq).
+    """
+    B, Sq, H, D = q.shape
+    Hkv = k.shape[2]
+    if Hkv != H:
+        rep = H // Hkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    Sk = k.shape[1]
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    logits = logits * (D**-0.5)
+    if softcap and softcap > 0:
+        logits = jnp.tanh(logits / softcap) * softcap
+    qpos = jnp.arange(Sq) + (Sk - Sq)
+    kpos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask = mask & (kpos[None, :] <= qpos[:, None])
+    if window is not None:
+        mask = mask & (qpos[:, None] - kpos[None, :] < window)
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)

@@ -1,0 +1,18 @@
+"""Jitted public wrapper for the fused LoRA kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.lora.lora import lora_residual_2d
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_t", "interpret"))
+def lora_residual(x, down, up, *, scale: float, block_t: int = 256, interpret: bool = False):
+    """y = x + scale·(x·down)·up for x of any leading shape (..., D)."""
+    lead = x.shape[:-1]
+    d = x.shape[-1]
+    flat = x.reshape(-1, d)
+    out = lora_residual_2d(flat, down, up, scale=scale, block_t=block_t, interpret=interpret)
+    return out.reshape(*lead, d)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the fused NanoAdapter (LoRA) kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def lora_residual(x, down, up, *, scale: float):
+    """y = x + scale · (x @ down) @ up.
+
+    x (..., D); down (D, r); up (r, D).
+    """
+    h = x.astype(jnp.float32) @ down.astype(jnp.float32)
+    y = h @ up.astype(jnp.float32)
+    return (x.astype(jnp.float32) + scale * y).astype(x.dtype)

@@ -1,0 +1,14 @@
+"""Jitted public wrapper for the SSD chunked-scan kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.ssd_scan.ssd_scan import ssd_chunked_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x, dt, A, B, C, *, chunk: int = 256, interpret: bool = False):
+    """Mamba2 SSD: y_t = C_t · h_t with h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t."""
+    return ssd_chunked_pallas(x, dt, A, B, C, chunk=chunk, interpret=interpret)

@@ -1,0 +1,135 @@
+"""Pure-jnp oracle for the Mamba2 SSD chunked scan (arXiv:2405.21060 §6).
+
+The SSD duality: the selective-SSM output
+    h_t = exp(dt_t · A) h_{t-1} + dt_t · (B_t ⊗ x_t),   y_t = C_t · h_t
+equals a masked attention-like form within chunks plus a low-rank inter-chunk
+correction. The chunked algorithm computes, per chunk of length Q:
+
+  intra:  y_i += Σ_{j<=i} exp(L_i - L_j) (C_i·B_j) dt_j x_j     (Q×Q matmuls)
+  state:  S_c  = Σ_j exp(L_last - L_j) dt_j B_j ⊗ x_j           (chunk summary)
+  inter:  y_i += exp(L_i) · C_i · H_c                            (carried state)
+
+with L = cumsum(dt·A) inside the chunk and H_{c+1} = exp(L_last) H_c + S_c.
+This matmul-dominant form is the TPU-idiomatic replacement for the CUDA
+selective scan — all heavy terms map to the MXU.
+
+This file is the slow-but-obviously-correct reference; the Pallas kernel in
+``ssd_scan.py`` must match it (tests sweep shapes/dtypes vs this oracle).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_reference_sequential(x, dt, A, B, C):
+    """Literal O(S) recurrence — ground truth for everything else.
+
+    x (Bt, S, H, P); dt (Bt, S, H); A (H,); B (Bt, S, N); C (Bt, S, N)
+    returns y (Bt, S, H, P).
+    """
+    Bt, S, H, P = x.shape
+    N = B.shape[-1]
+
+    def step(h, inp):
+        xt, dtt, Bt_, Ct_ = inp  # (Bt,H,P), (Bt,H), (Bt,N), (Bt,N)
+        decay = jnp.exp(dtt * A)[..., None, None]          # (Bt,H,1,1)
+        upd = dtt[..., None, None] * xt[..., None] * Bt_[:, None, None, :]
+        h = h * decay + upd                                 # (Bt,H,P,N)
+        y = jnp.sum(h * Ct_[:, None, None, :], axis=-1)     # (Bt,H,P)
+        return h, y
+
+    h0 = jnp.zeros((Bt, H, P, N), jnp.float32)
+    xs = (
+        jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(B, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(C, 1, 0).astype(jnp.float32),
+    )
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)  # (Bt,S,H,P)
+
+
+def _segsum(la):
+    """la (..., Q) log-decays -> (..., Q, Q) lower-tri cumulative sums.
+
+    out[i, j] = sum_{k=j+1..i} la_k  for j <= i (the decay from step j to i).
+    """
+    Q = la.shape[-1]
+    cs = jnp.cumsum(la, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # [i, j] = L_i - L_j
+    mask = jnp.tril(jnp.ones((Q, Q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int):
+    """Chunked SSD — vectorized jnp oracle for the Pallas kernel.
+
+    Same signature semantics as :func:`ssd_reference_sequential`.
+    """
+    Bt, S, H, P = x.shape
+    N = B.shape[-1]
+    Q = chunk
+    pad = (-S) % Q
+    if pad:
+        zf = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        x, dt, B, C = zf(x), zf(dt), zf(B), zf(C)
+    Sp = x.shape[1]
+    nc = Sp // Q
+
+    xf = x.reshape(Bt, nc, Q, H, P).astype(jnp.float32)
+    dtf = dt.reshape(Bt, nc, Q, H).astype(jnp.float32)
+    Bf = B.reshape(Bt, nc, Q, N).astype(jnp.float32)
+    Cf = C.reshape(Bt, nc, Q, N).astype(jnp.float32)
+
+    la = dtf * A  # (Bt, nc, Q, H) log-decay per step (negative)
+    lah = jnp.moveaxis(la, -1, 2)  # (Bt, nc, H, Q)
+    L = jnp.cumsum(lah, axis=-1)   # (Bt, nc, H, Q)
+
+    # --- intra-chunk (quadratic within chunk, MXU-friendly) ---
+    seg = _segsum(lah)                                   # (Bt, nc, H, Q, Q)
+    CB = jnp.einsum("bcin,bcjn->bcij", Cf, Bf)           # (Bt, nc, Q, Q)
+    att = CB[:, :, None] * jnp.exp(seg)                  # (Bt, nc, H, Q, Q)
+    xdt = xf * dtf[..., None]                            # (Bt, nc, Q, H, P)
+    y_intra = jnp.einsum("bchij,bcjhp->bcihp", att, xdt)
+
+    # --- chunk states ---
+    dec_last = jnp.exp(L[..., -1:] - L)                  # (Bt, nc, H, Q)
+    states = jnp.einsum("bchj,bcjn,bcjhp->bchnp", dec_last, Bf, xdt)  # (Bt,nc,H,N,P)
+
+    # --- inter-chunk recurrence (tiny scan over nc chunks) ---
+    chunk_decay = jnp.exp(L[..., -1])                    # (Bt, nc, H)
+
+    def step(h, inp):
+        st, dec = inp                                    # (Bt,H,N,P), (Bt,H)
+        h_new = h * dec[..., None, None] + st
+        return h_new, h                                  # emit state BEFORE chunk
+
+    h0 = jnp.zeros((Bt, H, N, P), jnp.float32)
+    _, Hs = jax.lax.scan(
+        step,
+        h0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    Hs = jnp.moveaxis(Hs, 0, 1)                          # (Bt, nc, H, N, P)
+
+    y_inter = jnp.einsum(
+        "bcin,bcih,bchnp->bcihp", Cf, jnp.exp(jnp.moveaxis(L, 2, -1)), Hs
+    )
+    y = (y_intra + y_inter).reshape(Bt, Sp, H, P)
+    if pad:
+        y = y[:, :S]
+    return y.astype(x.dtype)
+
+
+def ssd_decode_step(h, x, dt, A, B, C):
+    """Single decode step. h (Bt,H,P,N) carried state.
+
+    x (Bt,H,P); dt (Bt,H); A (H,); B (Bt,N); C (Bt,N).
+    Returns (y (Bt,H,P), h_new).
+    """
+    decay = jnp.exp(dt.astype(jnp.float32) * A)[..., None, None]
+    upd = dt[..., None, None] * x[..., None] * B[:, None, None, :]
+    h = h * decay + upd.astype(jnp.float32)
+    y = jnp.sum(h * C[:, None, None, :], axis=-1)
+    return y.astype(x.dtype), h

@@ -1,0 +1,96 @@
+"""Mamba2 SSD chunked scan — Pallas TPU kernel.
+
+TPU adaptation of the CUDA selective scan (DESIGN.md §3): the state-space
+duality lets each Q-length chunk be computed as two MXU matmuls (intra-chunk
+"attention" C·Bᵀ⊙decay and the state contraction) plus an O(1)-per-chunk
+recurrence. The kernel runs grid (B, H, n_chunks) with the chunk axis
+innermost/sequential; the carried state h (N × P) lives in fp32 VMEM scratch
+across chunk steps (initialized at c==0), so the recurrence never touches
+HBM.
+
+Per grid step the VMEM working set is
+    x (Q, P) + B, C (Q, N) + att (Q, Q) + h (N, P)
+≈ 1.3 MiB at Q=256, P=64, N=128 (fp32) — comfortably VMEM-resident with
+room for double buffering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, o_ref, h_scr, *, chunk: int):
+    cb = pl.program_id(2)
+
+    @pl.when(cb == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)     # (Q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)      # (Q,)
+    A = a_ref[0].astype(jnp.float32)              # scalar (per head)
+    Bm = b_ref[0, :, :].astype(jnp.float32)       # (Q, N)
+    Cm = c_ref[0, :, :].astype(jnp.float32)       # (Q, N)
+
+    la = dt * A                                    # (Q,) log-decays (<= 0)
+    L = jnp.cumsum(la)                             # (Q,)
+    # segment decay matrix: seg[i, j] = L_i - L_j for j <= i
+    li = L[:, None]
+    lj = L[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    seg = jnp.where(jj <= ii, li - lj, -jnp.inf)
+
+    xdt = x * dt[:, None]                          # (Q, P)
+    cb_mat = jnp.dot(Cm, Bm.T, preferred_element_type=jnp.float32)  # (Q, Q)
+    att = cb_mat * jnp.exp(seg)
+    y_intra = jnp.dot(att, xdt, preferred_element_type=jnp.float32)  # (Q, P)
+
+    # inter-chunk: y_i += exp(L_i) * C_i · h      (h: (N, P))
+    y_inter = jnp.exp(L)[:, None] * jnp.dot(
+        Cm, h_scr[...], preferred_element_type=jnp.float32
+    )
+
+    o_ref[0, :, 0, :] = (y_intra + y_inter).astype(o_ref.dtype)
+
+    # state update: h' = exp(L_last) h + Σ_j exp(L_last - L_j) B_j ⊗ xdt_j
+    dec_last = jnp.exp(L[-1] - L)                  # (Q,)
+    h_scr[...] = jnp.exp(L[-1]) * h_scr[...] + jnp.dot(
+        (Bm * dec_last[:, None]).T, xdt, preferred_element_type=jnp.float32
+    )
+
+
+def ssd_chunked_pallas(x, dt, A, B, C, *, chunk: int = 256, interpret: bool = False):
+    """x (Bt, S, H, P); dt (Bt, S, H); A (H,); B, C (Bt, S, N) -> y like x."""
+    Bt, S, H, P = x.shape
+    N = B.shape[-1]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    Sp = x.shape[1]
+    nc = Sp // Q
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, chunk=Q),
+        grid=(Bt, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, Q, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, Q, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, Q, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, Q, N), lambda b, h, c: (b, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Q, 1, P), lambda b, h, c: (b, c, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bt, Sp, H, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, B, C)
+    return out[:, :S] if pad else out

@@ -1,0 +1,377 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × input-shape × mesh).
+
+The FIRST two lines above run before ANY other import (jax locks the device
+count at first init): the dry-run — and only the dry-run — sees 512 host
+placeholder devices so ``jax.make_mesh`` can build the production meshes.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch grok-1-314b --shape train_4k --mesh pod
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh pod --out benchmarks/results/dryrun
+    PYTHONPATH=src python -m repro.launch.dryrun --list
+
+Per pair this prints compiled.memory_analysis() (proves it fits) and
+cost_analysis() (FLOPs/bytes for §Roofline), parses collective bytes from
+the optimized HLO, and optionally writes a JSON record consumed by
+benchmarks/roofline_table.py.
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config
+from repro.launch import roofline as roofline_lib
+from repro.launch import sharding_rules as rules
+from repro.launch import steps as steps_lib
+from repro.launch.steps import exec_config, shape_supported, _depth_points
+from repro.launch.mesh import make_production_mesh
+from repro.sharding import use_mesh
+
+
+def build_lowerable(cfg, shape_cfg, mesh):
+    """Returns (jitted fn, arg specs) for the workload."""
+    ins = steps_lib.input_specs(cfg, shape_cfg)
+    backbone = steps_lib.backbone_specs(cfg)
+    adapters = steps_lib.adapter_specs(cfg)
+    b_shard = rules.make_param_shardings(mesh, backbone, kind=shape_cfg.kind)
+    a_shard = rules.replicated(mesh, adapters)
+
+    if shape_cfg.kind == "train":
+        opt = steps_lib.opt_state_specs(cfg)
+        o_shard = rules.replicated(mesh, opt)
+        batch = ins["batch"]
+        batch_shard = rules.make_batch_shardings(mesh, batch)
+        fn = steps_lib.make_train_step(cfg)
+        jitted = jax.jit(
+            fn, in_shardings=(b_shard, a_shard, o_shard, batch_shard)
+        )
+        args = (backbone, adapters, opt, batch)
+        return jitted, args
+
+    if shape_cfg.kind == "prefill":
+        batch = ins["batch"]
+        batch_shard = rules.make_batch_shardings(mesh, batch)
+        fn = steps_lib.make_prefill_step(cfg, capacity=shape_cfg.seq_len)
+        jitted = jax.jit(fn, in_shardings=(b_shard, a_shard, batch_shard))
+        args = (backbone, adapters, batch)
+        return jitted, args
+
+    # decode — the state buffer is donated (in/out aliased KV cache, the
+    # standard serving discipline; without it the cache is double-counted)
+    state = ins["state"]
+    s_shard = rules.make_state_shardings(mesh, state)
+    fn = steps_lib.make_decode_step(cfg)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    tok_shard = rules.make_batch_shardings(mesh, ins["token"])
+    pos_shard = NamedSharding(mesh, P())
+    jitted = jax.jit(
+        fn,
+        in_shardings=(b_shard, a_shard, s_shard, tok_shard, pos_shard),
+        donate_argnums=(2,),
+    )
+    args = (backbone, adapters, state, ins["token"], ins["pos"])
+    return jitted, args
+
+
+def _sharded_bytes(tree, shardings) -> int:
+    """Exact per-device bytes of a pytree under its NamedShardings."""
+    import numpy as np
+
+    total = 0
+    for leaf, sh in zip(jax.tree.leaves(tree), jax.tree.leaves(shardings)):
+        shard_shape = sh.shard_shape(leaf.shape)
+        total += int(np.prod(shard_shape)) * jnp.dtype(leaf.dtype).itemsize
+    return total
+
+
+def analytic_footprint(cfg, shape_cfg, mesh) -> dict:
+    """Per-device HBM footprint: sharded params + adapters + opt + inputs/state.
+
+    This is the TPU 'does it fit' number; the XLA-CPU memory_analysis temp
+    numbers double-count while-loop buffers (no in-place loop aliasing on the
+    CPU backend) and are reported alongside as an upper bound.
+    """
+    backbone = steps_lib.backbone_specs(cfg)
+    adapters = steps_lib.adapter_specs(cfg)
+    b_bytes = _sharded_bytes(backbone, rules.make_param_shardings(mesh, backbone, kind=shape_cfg.kind))
+    a_bytes = _sharded_bytes(adapters, rules.replicated(mesh, adapters))
+    out = {"params": b_bytes, "adapters": a_bytes}
+    ins = steps_lib.input_specs(cfg, shape_cfg)
+    if shape_cfg.kind == "train":
+        opt = steps_lib.opt_state_specs(cfg)
+        out["opt"] = _sharded_bytes(opt, rules.replicated(mesh, opt))
+        out["inputs"] = _sharded_bytes(ins["batch"], rules.make_batch_shardings(mesh, ins["batch"]))
+    elif shape_cfg.kind == "prefill":
+        out["inputs"] = _sharded_bytes(ins["batch"], rules.make_batch_shardings(mesh, ins["batch"]))
+        from repro.models import model as model_lib
+
+        state = jax.eval_shape(lambda: model_lib.init_state(
+            cfg, shape_cfg.global_batch, shape_cfg.seq_len, jnp.dtype(cfg.dtype)))
+        out["state_out"] = _sharded_bytes(state, rules.make_state_shardings(mesh, state))
+    else:
+        out["state"] = _sharded_bytes(ins["state"], rules.make_state_shardings(mesh, ins["state"]))
+    # activation workspace allowance: 4 live (B_loc, S, D) fp32 buffers
+    n_batch_shards = 1
+    for ax in ("pod", "data"):
+        n_batch_shards *= mesh.shape.get(ax, 1)
+    b_loc = max(shape_cfg.global_batch // n_batch_shards, 1)
+    s = shape_cfg.seq_len if shape_cfg.kind != "decode" else 1
+    out["workspace_est"] = 4 * b_loc * s * cfg.d_model * 4
+    out["total"] = sum(out.values())
+    return out
+
+
+def _compile_once(cfg, shape_cfg, mesh):
+    """lower + compile; returns (cost dict, hlo text, memory stats, timings)."""
+    t0 = time.time()
+    with use_mesh(mesh):
+        jitted, args = build_lowerable(cfg, shape_cfg, mesh)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        hlo = compiled.as_text()
+    return dict(cost) if cost else {}, hlo, mem, (t_lower, t_compile)
+
+
+def _measure(cfg, shape_cfg, mesh):
+    cost, hlo, mem, _ = _compile_once(cfg, shape_cfg, mesh)
+    coll = roofline_lib.collective_bytes_from_hlo(hlo)
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": float(sum(v for k, v in coll.items() if k != "count")),
+        "coll_breakdown": coll,
+    }
+
+
+def _lin(points, depths, full_depth):
+    """Linear extrapolation of each metric to full depth."""
+    out = {}
+    for key in ("flops", "bytes", "coll"):
+        if len(points) == 1:
+            out[key] = points[0][key]
+        else:
+            d = (points[1][key] - points[0][key]) / (depths[1] - depths[0])
+            out[key] = points[0][key] + d * (full_depth - depths[0])
+    return out
+
+
+def run_roofline(arch: str, shape_name: str, overrides: dict | None = None,
+                 out_dir: str | None = None, verbose: bool = True, tag: str = "") -> dict:
+    """Roofline terms on the single-pod mesh via unrolled-depth extrapolation.
+
+    XLA cost_analysis counts while-loop (scan) bodies once, so we lower the
+    SAME step UNROLLED at reduced depths and extrapolate linearly in depth
+    (exact for homogeneous stacks; hybrid gets a per-recurrent-layer
+    correction; small archs are unrolled fully). Validation of this
+    methodology vs a fully-unrolled 40-layer compile is in EXPERIMENTS.md.
+    """
+    cfg0 = get_config(arch)
+    shape_cfg = INPUT_SHAPES[shape_name]
+    ok, why = shape_supported(cfg0, shape_cfg)
+    rec = {"arch": arch, "shape": shape_name, "mesh": "pod", "mode": "roofline",
+           "tag": tag, "status": "skip", "reason": why, "overrides": overrides or {}}
+    if not ok:
+        if verbose:
+            print(f"[skip] roofline {arch} × {shape_name}: {why}")
+        _maybe_write(out_dir, rec, tag)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=False)
+    chips = int(len(mesh.devices.flat))
+    t0 = time.time()
+    try:
+        kind, depths = _depth_points(cfg0)
+        points = []
+        for L in depths:
+            cfg = exec_config(cfg0.with_(n_layers=L), shape_cfg, "roofline", overrides)
+            points.append(_measure(cfg, shape_cfg, mesh))
+        if kind == "exact":
+            est = {k: points[0][k] for k in ("flops", "bytes", "coll")}
+        elif kind == "hybrid":
+            # f(3)=f0+t, f(6)=f0+2t, f(8)=f(6)+2r  ->  full = f0 + 12t + 2r
+            est = {}
+            for k in ("flops", "bytes", "coll"):
+                t = points[1][k] - points[0][k]
+                r = (points[2][k] - points[1][k]) / 2.0
+                f0 = points[0][k] - t
+                n_t, n_e = cfg0.n_layers // 3, cfg0.n_layers % 3
+                est[k] = f0 + n_t * t + n_e * r
+        else:
+            est = _lin(points, depths, cfg0.n_layers)
+
+        rep = roofline_lib.analyze(
+            arch=arch, shape=shape_name, mesh_name="pod", chips=chips,
+            cost={"flops": est["flops"], "bytes accessed": est["bytes"]},
+            hlo_text="", model_flops=roofline_lib.model_flops_estimate(cfg0, shape_cfg),
+        )
+        # patch the collective term with the extrapolated value
+        rep.collective_bytes = est["coll"]
+        rep.t_collective = est["coll"] / roofline_lib.ICI_BW
+        terms = {"compute": rep.t_compute, "memory": rep.t_memory,
+                 "collective": rep.t_collective}
+        rep.bottleneck = max(terms, key=terms.get)
+        rep.collective_breakdown = points[-1]["coll_breakdown"]
+        rec.update(rep.to_dict())
+        rec["status"] = "ok"
+        rec["depth_points"] = {"kind": kind, "depths": depths, "points": points}
+        rec["wall_s"] = round(time.time() - t0, 1)
+        if verbose:
+            print(f"[roofline] {arch} × {shape_name} ({kind} @ {depths}, {rec['wall_s']}s{' ' + tag if tag else ''})")
+            print(f"     flops={rep.hlo_flops:.3e} bytes={rep.hlo_bytes:.3e} coll={rep.collective_bytes:.3e}")
+            print(f"     compute {rep.t_compute*1e3:.2f}ms | memory {rep.t_memory*1e3:.2f}ms | "
+                  f"collective {rep.t_collective*1e3:.2f}ms -> {rep.bottleneck}-bound; "
+                  f"useful {100*rep.useful_ratio:.0f}%")
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        if verbose:
+            print(f"[ERROR] roofline {arch} × {shape_name}: {rec['error']}")
+    _maybe_write(out_dir, rec, tag)
+    return rec
+
+
+def run_pair(arch: str, shape_name: str, mesh_kind: str, out_dir: str | None = None,
+             verbose: bool = True, overrides: dict | None = None) -> dict:
+    """Full-config scanned dry-run: proves lower+compile+fits for the pair."""
+    cfg = get_config(arch)
+    shape_cfg = INPUT_SHAPES[shape_name]
+    ok, why = shape_supported(cfg, shape_cfg)
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind, "mode": "full",
+        "status": "skip", "reason": why,
+    }
+    if not ok:
+        if verbose:
+            print(f"[skip] {arch} × {shape_name}: {why}")
+        _maybe_write(out_dir, rec)
+        return rec
+
+    cfg = exec_config(cfg, shape_cfg, "full", overrides)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    chips = int(len(mesh.devices.flat))
+    try:
+        cost, hlo, mem, (t_lower, t_compile) = _compile_once(cfg, shape_cfg, mesh)
+        mem_str = str(mem)
+        bytes_per_dev = None
+        try:
+            bytes_per_dev = (
+                getattr(mem, "argument_size_in_bytes", 0)
+                + getattr(mem, "output_size_in_bytes", 0)
+                + getattr(mem, "temp_size_in_bytes", 0)
+            ) or None
+        except Exception:
+            pass
+
+        rep = roofline_lib.analyze(
+            arch=arch, shape=shape_name, mesh_name=mesh_kind, chips=chips,
+            cost=cost, hlo_text=hlo,
+            model_flops=roofline_lib.model_flops_estimate(cfg, shape_cfg),
+            bytes_per_device=bytes_per_dev,
+            notes="scanned module: per-layer costs counted once by XLA; see roofline mode",
+        )
+        foot = analytic_footprint(cfg, shape_cfg, mesh)
+        rec.update(rep.to_dict())
+        rec["status"] = "ok"
+        rec["t_lower_s"] = round(t_lower, 1)
+        rec["t_compile_s"] = round(t_compile, 1)
+        rec["memory_analysis"] = mem_str
+        rec["analytic_footprint"] = foot
+        if verbose:
+            print(f"[ok] {arch} × {shape_name} × {mesh_kind} "
+                  f"(lower {t_lower:.0f}s, compile {t_compile:.0f}s)")
+            print(f"     memory_analysis: {mem_str}")
+            fit = "FITS" if foot["total"] <= 16 * 1024**3 else "OVER v5e 16GiB"
+            print(f"     analytic bytes/device: {foot['total']/1024**3:.2f} GiB -> {fit} "
+                  f"({ {k: round(v/1024**3, 3) for k, v in foot.items() if k != 'total'} } GiB)")
+            if bytes_per_dev:
+                print(f"     xla-cpu bytes/device (upper bound, no loop aliasing): "
+                      f"{bytes_per_dev/1024**3:.2f} GiB")
+            print(f"     collectives (scanned module): {rep.collective_bytes:.3e} B "
+                  f"{ {k: v for k, v in rep.collective_breakdown.items() if v} }")
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        if verbose:
+            print(f"[ERROR] {arch} × {shape_name} × {mesh_kind}: {rec['error']}")
+    _maybe_write(out_dir, rec)
+    return rec
+
+
+def _maybe_write(out_dir, rec, tag: str = ""):
+    if not out_dir:
+        return
+    os.makedirs(out_dir, exist_ok=True)
+    mode = rec.get("mode", "full")
+    suffix = f"__{tag}" if tag else ""
+    name = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}__{mode}{suffix}.json".replace("/", "_")
+    with open(os.path.join(out_dir, name), "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=ASSIGNED_ARCHS + ["all"], default=None)
+    ap.add_argument("--shape", choices=list(INPUT_SHAPES) + ["all"], default="all")
+    ap.add_argument("--mesh", choices=["pod", "multipod", "both"], default="pod")
+    ap.add_argument("--mode", choices=["full", "roofline", "both"], default="full")
+    ap.add_argument("--all", action="store_true", help="all archs × all shapes")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--out", default=None, help="directory for per-pair JSON records")
+    ap.add_argument("--tag", default="", help="suffix for hillclimb variants")
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg override key=value (e.g. loss_chunk=1024)")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for a in ASSIGNED_ARCHS:
+            print(a)
+        return 0
+
+    overrides = {}
+    for ov in args.override:
+        k, v = ov.split("=", 1)
+        try:
+            v = json.loads(v)
+        except json.JSONDecodeError:
+            pass
+        overrides[k] = v
+
+    archs = ASSIGNED_ARCHS if (args.all or args.arch in (None, "all")) else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+
+    n_err = 0
+    for arch in archs:
+        for shape in shapes:
+            if args.mode in ("full", "both"):
+                for mesh_kind in meshes:
+                    rec = run_pair(arch, shape, mesh_kind, out_dir=args.out,
+                                   overrides=overrides or None)
+                    if rec["status"] == "error":
+                        n_err += 1
+            if args.mode in ("roofline", "both"):
+                rec = run_roofline(arch, shape, overrides=overrides or None,
+                                   out_dir=args.out, tag=args.tag)
+                if rec["status"] == "error":
+                    n_err += 1
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,37 @@
+"""Production mesh definitions.
+
+Single pod: 16×16 = 256 chips (v5e pod), axes (data, model).
+Multi-pod:  2×16×16 = 512 chips, axes (pod, data, model) — batch/client
+parallelism spans (pod, data); tensor parallelism never crosses pods (only
+parameter-plane collectives ride the DCN).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before any jax import; everything else
+sees the real 1-CPU topology).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_devices: int | None = None):
+    """Tiny mesh over whatever devices exist (tests on CPU: 1×1)."""
+    n = n_devices or len(jax.devices())
+    model = 1
+    for m in (4, 2, 1):
+        if n % m == 0:
+            model = m
+            break
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+# v5e hardware constants (roofline denominators)
+PEAK_FLOPS_BF16 = 197e12      # per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW = 50e9                 # bytes/s per link (~per-direction, per chip)

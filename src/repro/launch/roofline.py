@@ -1,0 +1,160 @@
+"""Roofline-term extraction from a compiled dry-run artifact.
+
+Three terms per (arch × shape × mesh), all in seconds (v5e constants from
+repro.launch.mesh). ``compiled.cost_analysis()`` describes the **per-device
+SPMD module** (the lowered HLO is one device's program), so the terms are
+directly per-chip — equivalent to the spec's global/(chips×peak) form:
+
+    compute    = HLO_FLOPs_per_device / 197 TF/s        (= global/(chips×peak))
+    memory     = HLO_bytes_per_device / 819 GB/s
+    collective = collective_bytes_per_device / 50 GB/s
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``. Collective
+bytes are NOT in cost_analysis: we parse the optimized HLO text and sum the
+output-shape bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute op (methodology note: output bytes ≈ bytes
+crossing links for AG/AR up to the (n-1)/n ring factor; we report the raw
+sum and treat it as an upper-ish bound consistently across iterations, which
+is what the hillclimb needs).
+
+Also computed: MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) and the
+useful-compute ratio MODEL_FLOPS / HLO_FLOPs (catches remat/redundancy).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, asdict
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|f8e4m3|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|pred)\[([0-9,]*)\]")
+
+
+def _first_shape_bytes(line: str) -> int:
+    """Bytes of the result shape(s) at the start of an HLO instruction line."""
+    # instruction form: "%name = TYPE[dims]{layout} op-name(...)" or tuple
+    lhs = line.split("=", 1)
+    if len(lhs) != 2:
+        return 0
+    rhs = lhs[1]
+    op_pos = min((rhs.find(c) for c in _COLLECTIVES if rhs.find(c) >= 0), default=-1)
+    if op_pos < 0:
+        return 0
+    result_part = rhs[:op_pos]
+    total = 0
+    for m in _SHAPE_RE.finditer(result_part):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes per collective kind over the optimized HLO."""
+    out = {c: 0 for c in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "fusion" in s.split("(")[0]:
+            continue
+        for c in _COLLECTIVES:
+            # match the op name as the instruction (e.g. " = bf16[..] all-gather(")
+            if re.search(rf"=\s*[^=]*\b{c}(-start|-done)?\(", s):
+                if c + "-done" in s:
+                    continue  # avoid double counting start/done pairs
+                b = _first_shape_bytes(s)
+                out[c] += b
+                out["count"] += 1
+                break
+    return out
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    collective_breakdown: Dict[str, int]
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops: float
+    useful_ratio: float
+    bytes_per_device: Optional[float] = None
+    notes: str = ""
+
+    def to_dict(self):
+        return asdict(self)
+
+
+def analyze(
+    *, arch: str, shape: str, mesh_name: str, chips: int,
+    cost: Dict, hlo_text: str, model_flops: float,
+    bytes_per_device: Optional[float] = None, notes: str = "",
+) -> RooflineReport:
+    flops = float(cost.get("flops", 0.0))
+    # cost_analysis reports bytes accessed across operands+outputs
+    nbytes = float(cost.get("bytes accessed", cost.get("bytes_accessed", 0.0)))
+    coll = collective_bytes_from_hlo(hlo_text)
+    coll_bytes = float(sum(v for k, v in coll.items() if k != "count"))
+
+    # cost/hlo describe ONE device's program: per-chip denominators.
+    t_c = flops / PEAK_FLOPS_BF16
+    t_m = nbytes / HBM_BW
+    t_x = coll_bytes / ICI_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    bottleneck = max(terms, key=terms.get)
+    model_flops_dev = model_flops / max(chips, 1)
+    return RooflineReport(
+        arch=arch,
+        shape=shape,
+        mesh=mesh_name,
+        chips=chips,
+        hlo_flops=flops,
+        hlo_bytes=nbytes,
+        collective_bytes=coll_bytes,
+        collective_breakdown=coll,
+        t_compute=t_c,
+        t_memory=t_m,
+        t_collective=t_x,
+        bottleneck=bottleneck,
+        model_flops=model_flops,
+        useful_ratio=(model_flops_dev / flops) if flops else 0.0,
+        bytes_per_device=bytes_per_device,
+        notes=notes,
+    )
+
+
+def model_flops_estimate(cfg, shape_cfg) -> float:
+    """6·N·D (training) / 2·N·D (inference) with N = active params."""
+    from repro.core.comm import backbone_param_count
+
+    n = backbone_param_count(cfg)
+    if cfg.family == "moe":
+        m = cfg.moe
+        expert_total = cfg.n_layers * m.n_experts * 3 * cfg.d_model * cfg.d_ff
+        expert_active = cfg.n_layers * m.top_k * 3 * cfg.d_model * cfg.d_ff
+        n = n - expert_total + expert_active
+    tokens = shape_cfg.global_batch * (shape_cfg.seq_len if shape_cfg.kind != "decode" else 1)
+    mult = 6.0 if shape_cfg.kind == "train" else 2.0
+    return mult * n * tokens

@@ -1,0 +1,189 @@
+"""Parameter / input / state sharding rules (DESIGN.md §5).
+
+Maps every pytree leaf to a logical PartitionSpec by (path, shape). Logical
+axes: "data" (aliased to ("pod","data") on the multi-pod mesh by
+repro.sharding) and "model". Non-divisible dims automatically fall back to
+replication via ``resolve_spec`` — this implements the documented fallbacks
+(qwen1.5 20 heads, glm4 kv=2, mamba2/whisper vocab, KV-cache head_dim
+sharding when kv-heads don't divide the model axis).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.sharding import resolve_spec
+
+# layer-stack containers: leaves under these have a leading layer dim
+_STACKED = ("layers", "triples", "extras", "enc_layers", "dec_layers")
+
+BATCH = "data"  # alias expanded to ("pod", "data") by the resolver
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for p in path:
+        if hasattr(p, "key"):
+            names.append(str(p.key))
+        elif hasattr(p, "name"):
+            names.append(str(p.name))
+        elif hasattr(p, "idx"):
+            names.append(str(p.idx))
+    return tuple(names)
+
+
+def param_logical_spec(path_names: Tuple[str, ...], shape: Tuple[int, ...],
+                       kind: str = "train"):
+    """Logical spec for a PARAMETER leaf (pre layer-stack adjustment).
+
+    ``kind`` selects the workload-aware MoE expert layout when the expert
+    count doesn't divide the model axis (grok: 8 experts vs 16):
+      * train/prefill — token-sharded activations: experts 2D-sharded over
+        (data, model) with the token groups staying on ``data``.
+      * decode — weight-stationary: the FFN width F sharded over the FULL
+        (data × model) mesh so the single-token expert matmuls reduce with
+        one small fp32 all-reduce instead of all-gathering 400 MB of expert
+        weights per layer per token (EXPERIMENTS.md §Perf, grok/decode it. 2).
+    """
+    name = path_names[-1] if path_names else ""
+    nd = len(shape)
+
+    # --- embeddings ---
+    if name == "table":
+        return ("model", None)  # vocab-sharded; falls back when V % 16 != 0
+    if name == "pos":
+        return (None, None)
+
+    # --- MoE expert weights (E, D, F) / (E, F, D) ---
+    if "moe" in path_names and name in ("w_gate", "w_up") and nd == 3:
+        if shape[0] % 16 == 0:
+            return ("model", None, None)
+        if kind == "decode":
+            return (None, None, ("data", "model"))
+        return (None, "data", "model")
+    if "moe" in path_names and name == "w_down" and nd == 3:
+        if shape[0] % 16 == 0:
+            return ("model", None, None)
+        if kind == "decode":
+            return (None, ("data", "model"), None)
+        return (None, "model", "data")
+    if name == "router":
+        return (None,) * nd
+
+    # --- dense MLP ---
+    if name in ("w_gate", "w_up"):
+        return (None, "model")
+    if name == "w_down":
+        return ("model", None)
+
+    # --- attention ---
+    if name in ("wq", "wk", "wv"):
+        return (None, "model")
+    if name == "wo":
+        return ("model", None)
+    if name in ("bq", "bk", "bv"):
+        return ("model",)
+
+    # --- mamba2 ---
+    if name == "in_proj":
+        return (None, "model")
+    if name == "out_proj":
+        return ("model", None)
+    if name == "conv_w":
+        return (None, "model")
+
+    # --- RG-LRU ---
+    if name in ("w_gate_branch", "w_rec_branch"):
+        return (None, "model")
+    if name in ("w_a", "w_x"):
+        return (None, "model")
+    if name == "w_out":
+        return ("model", None)
+
+    # norms, biases, gates, adapters, connector: replicate
+    return (None,) * nd
+
+
+def spec_for_param(path, leaf, kind: str = "train") -> Tuple:
+    names = _path_names(path)
+    shape = tuple(leaf.shape)
+    stacked = any(n in _STACKED for n in names)
+    if stacked and shape:
+        inner = param_logical_spec(names, shape[1:], kind)
+        return (None,) + tuple(inner)
+    return tuple(param_logical_spec(names, shape, kind))
+
+
+def make_param_shardings(mesh: Mesh, params, kind: str = "train"):
+    """NamedSharding pytree matching ``params`` (works on ShapeDtypeStructs)."""
+
+    def f(path, leaf):
+        spec = spec_for_param(path, leaf, kind)
+        return NamedSharding(mesh, resolve_spec(mesh, leaf.shape, spec))
+
+    return jax.tree_util.tree_map_with_path(f, params)
+
+
+# ---------------------------------------------------------------------------
+# inputs / decode state
+# ---------------------------------------------------------------------------
+
+def batch_spec(ndim: int):
+    """tokens/labels/mask (B, S[, ...]): batch over (pod, data)."""
+    return (BATCH,) + (None,) * (ndim - 1)
+
+
+def make_batch_shardings(mesh: Mesh, batch):
+    def f(leaf):
+        return NamedSharding(mesh, resolve_spec(mesh, leaf.shape, batch_spec(leaf.ndim)))
+
+    return jax.tree.map(f, batch)
+
+
+def _kv_cache_spec(mesh: Mesh, shape):
+    """(L, B, C, kv, hd): batch over (pod,data); kv over model when divisible,
+    else head_dim over model (the documented fallback), else replicated."""
+    model = mesh.shape.get("model", 1)
+    l, b, c, kv, hd = shape
+    if kv % model == 0:
+        return (None, BATCH, None, "model", None)
+    if hd % model == 0:
+        return (None, BATCH, None, None, "model")
+    return (None, BATCH, None, None, None)
+
+
+def make_state_shardings(mesh: Mesh, state):
+    """Decode-state pytree: KV caches (5D), SSM/RG-LRU states (3-5D)."""
+
+    def f(path, leaf):
+        shape = tuple(leaf.shape)
+        if len(shape) == 5:  # stacked KVCache (L, B, C, kv, hd)
+            spec = _kv_cache_spec(mesh, shape)
+        elif len(shape) == 4:  # stacked SSM h (L, B, H, P*) or rglru conv (L, B, w, dr)
+            spec = (None, BATCH, None, None)
+        elif len(shape) == 3:  # stacked rglru h (L, B, dr)
+            spec = (None, BATCH, "model")
+        elif len(shape) == 2:
+            spec = (BATCH, None)
+        else:
+            spec = (None,) * len(shape)
+        # stacked SSM state h is (L, B, H, P, N) = 5D too — disambiguate by a
+        # heuristic: KV caches have dim2 (capacity) >= 64 and dim3 (kv heads)
+        # small; SSM h has dim2 = heads. Use path names instead when present.
+        names = _path_names(path)
+        if "h" in names and len(shape) == 5:
+            spec = (None, BATCH, None, None, None)
+        if "conv" in names:
+            spec = (None, BATCH, None, None)[: len(shape)]
+        return NamedSharding(mesh, resolve_spec(mesh, shape, spec))
+
+    return jax.tree_util.tree_map_with_path(f, state)
+
+
+def replicated(mesh: Mesh, tree):
+    def f(leaf):
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(f, tree)

@@ -1,0 +1,210 @@
+"""The three lowered step functions (one per input-shape kind).
+
+These are the units the multi-pod dry-run compiles and the roofline
+analyses. All three are pure jittable functions of (params, inputs):
+
+  train_step    — FedNano federated training unit: NanoEdge forward (client
+                  half) -> frozen backbone fwd+bwd (server half) -> AdamW on
+                  adapter params ONLY + streaming Fisher accumulation. The
+                  backbone receives no gradient (it is a constant w.r.t. the
+                  differentiated argument) — exactly the paper's protocol.
+  prefill_step  — forward over the prompt, returns decode state + last logits.
+  decode_step   — ONE token against a seq_len cache/state.
+
+For VLM/audio archs the batch includes stub patch embeddings; the text/image
+NanoAdapters are applied client-side within the same program (the dry-run
+lowers the fused client+server computation; the wire split is exercised by
+repro.core.split and tested for gradient equivalence).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import adapters as adapters_lib
+from repro.core.types import Batch
+from repro.models import attention as attn_lib
+from repro.models import model as model_lib
+from repro.optim import adamw_update
+
+
+def make_train_step(cfg, hp_lr: float = 1e-3):
+    """(backbone, adapters, opt_state, batch) -> (adapters', opt_state', loss, fisher_sq)."""
+
+    def train_step(backbone, adapters, opt_state, batch: Batch):
+        def loss_fn(adp):
+            loss, aux = adapters_lib.fednano_loss(cfg, backbone, adp, batch)
+            return loss
+
+        loss, grads = jax.value_and_grad(loss_fn)(adapters)
+        new_adapters, new_opt = adamw_update(grads, opt_state, adapters, lr=hp_lr)
+        fisher_sq = jax.tree.map(lambda g: jnp.square(g.astype(jnp.float32)), grads)
+        return new_adapters, new_opt, loss, fisher_sq
+
+    return train_step
+
+
+def make_prefill_step(cfg, capacity: int):
+    """(backbone, adapters, batch) -> (state, last_logits)."""
+
+    def prefill_step(backbone, adapters, batch: Batch):
+        embeds, positions, labels, mask, enc = adapters_lib.nanoedge_forward(
+            cfg, backbone, adapters, batch
+        )
+        state, hidden = model_lib.prefill(cfg, backbone, embeds, positions, capacity,
+                                          enc_embeds=enc)
+        last = model_lib.logits(cfg, backbone, hidden[:, -1:, :])
+        return state, last
+
+    return prefill_step
+
+
+def make_decode_step(cfg):
+    """(backbone, adapters, state, token, pos) -> (logits, state').
+
+    token (B,) int32; the client-side NanoAdapter-T is applied to the new
+    token's embedding before it enters the backbone (split serving).
+    """
+
+    def decode_step(backbone, adapters, state, token, pos):
+        emb = model_lib.embed_tokens(cfg, backbone, token[:, None])  # (B, 1, D)
+        if "text" in adapters:
+            emb = adapters_lib.nano_adapter_apply(
+                adapters["text"], emb,
+                rank=cfg.adapter.rank, alpha=cfg.adapter.alpha,
+                use_pallas=cfg.use_pallas,
+            )
+        lg, state = model_lib.decode_step(cfg, backbone, emb, state, pos)
+        return lg, state
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# abstract input builders (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def text_seq_len(cfg, seq_len: int) -> int:
+    """Text-token count so that image patches + text == seq_len total."""
+    if cfg.family == "audio":
+        return seq_len  # decoder positions; encoder stream is separate
+    if cfg.frontend_dim:
+        from repro.models.vision_stub import num_patches
+
+        return max(seq_len - num_patches(cfg), 8)
+    return seq_len
+
+
+def batch_specs(cfg, batch: int, seq_len: int) -> Batch:
+    """Abstract Batch for train/prefill shapes."""
+    s_text = text_seq_len(cfg, seq_len)
+    patches = None
+    if cfg.frontend_dim:
+        from repro.models.vision_stub import num_patches
+
+        m = cfg.enc_seq_len if cfg.family == "audio" else num_patches(cfg)
+        patches = _sds((batch, m, cfg.frontend_dim), jnp.dtype(cfg.dtype))
+    return Batch(
+        tokens=_sds((batch, s_text), jnp.int32),
+        labels=_sds((batch, s_text), jnp.int32),
+        mask=_sds((batch, s_text), jnp.float32),
+        patches=patches,
+    )
+
+
+def input_specs(cfg, shape_cfg):
+    """ShapeDtypeStruct stand-ins for every model input of a workload.
+
+    Returns a dict with keys depending on shape_cfg.kind:
+      train:   {batch}
+      prefill: {batch}
+      decode:  {state, token, pos}
+    """
+    b, s = shape_cfg.global_batch, shape_cfg.seq_len
+    if shape_cfg.kind in ("train", "prefill"):
+        return {"batch": batch_specs(cfg, b, s)}
+    # decode: state with capacity seq_len + 1 new token
+    dtype = jnp.dtype(cfg.dtype)
+    state = jax.eval_shape(
+        lambda: model_lib.init_state(cfg, b, s, dtype)
+    )
+    return {
+        "state": state,
+        "token": _sds((b,), jnp.int32),
+        "pos": _sds((), jnp.int32),
+    }
+
+
+def adapter_specs(cfg):
+    return jax.eval_shape(
+        lambda: adapters_lib.init_nanoedge(jax.random.PRNGKey(0), cfg)
+    )
+
+
+def backbone_specs(cfg):
+    return jax.eval_shape(
+        lambda: model_lib.init_backbone(jax.random.PRNGKey(0), cfg)
+    )
+
+
+def opt_state_specs(cfg):
+    from repro.optim import adamw_init
+
+    return jax.eval_shape(adamw_init, adapter_specs(cfg))
+
+
+# ---------------------------------------------------------------------------
+# workload policy (shared by dryrun + tests; no jax device side effects here)
+# ---------------------------------------------------------------------------
+
+def shape_supported(cfg, shape_cfg) -> tuple[bool, str]:
+    """long_500k needs sub-quadratic sequence mixing (DESIGN.md §4)."""
+    if shape_cfg.name == "long_500k":
+        if cfg.family == "audio":
+            return False, "enc-dec audio backbone: fixed 1500-frame encoder context"
+        if not cfg.subquadratic:
+            return False, "pure full-attention arch (no SWA/block-sparse variant)"
+    return True, ""
+
+
+def exec_config(cfg, shape_cfg, mode: str, overrides: dict | None = None):
+    """Execution-config view for a dry-run.
+
+    mode "full":     scanned layers (production path, proves compile+fits),
+                     blockwise-softmax attention for long prefill.
+    mode "roofline": UNROLLED layers at reduced depths — XLA cost_analysis
+                     counts while-loop bodies once, so the roofline lowering
+                     must unroll; run_roofline extrapolates to full depth.
+    """
+    kw = {}
+    if shape_cfg.kind == "prefill":
+        # §Perf qwen1.5: context-parallel queries win for prefill but the
+        # backward of the layout regresses training -> prefill-only default.
+        kw["ctx_parallel_attn"] = True
+    if mode == "full":
+        if shape_cfg.kind != "decode":
+            kw["attn_chunk"] = 1024
+    else:
+        kw["scan_layers"] = False
+        kw["attn_chunk"] = None
+    if overrides:
+        kw.update(overrides)
+    return cfg.with_(**kw)
+
+
+def _depth_points(cfg):
+    """Unroll depths for the linear extrapolation (see run_roofline)."""
+    if cfg.family == "audio":
+        return "exact", [cfg.n_layers]          # 6+6 whisper: unroll fully
+    if cfg.family == "ssm":
+        return "exact", [cfg.n_layers]          # 24 small layers: unroll fully
+    if cfg.family == "hybrid":
+        return "hybrid", [3, 6, 8]              # (1 triple), (2 triples), (2 triples + 2 rec)
+    return "linear", [2, 4]

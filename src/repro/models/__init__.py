@@ -1,0 +1,14 @@
+from repro.models import attention, encdec, layers, model, moe, rglru, rotary, ssm, transformer, vision_stub
+
+__all__ = [
+    "attention",
+    "encdec",
+    "layers",
+    "model",
+    "moe",
+    "rglru",
+    "rotary",
+    "ssm",
+    "transformer",
+    "vision_stub",
+]

@@ -1,0 +1,114 @@
+"""Mixture-of-Experts layer — GShard/GSPMD-style grouped einsum dispatch.
+
+TPU adaptation (DESIGN.md §3): instead of a CUDA gather/scatter (megablocks)
+dispatch, tokens are partitioned into fixed-size *groups*; dispatch/combine
+are dense one-hot einsums of size tokens × E × capacity. Under pjit with
+experts sharded on the ``model`` axis and groups on ``data``, XLA emits the
+canonical all-to-all pair around the expert FFN — exactly the collective the
+roofline analysis tracks for the MoE architectures.
+
+Capacity per expert per group: C = round_up(G * top_k * cf / E, 4). Priority
+is choice-major (all top-1 picks rank before any top-2 pick), so a token's
+primary expert is never dropped because of someone's secondary choice.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, init_mlp, mlp
+from repro.sharding import constrain
+
+
+def _group_size(tokens: int, target: int = 512) -> int:
+    if tokens <= target:
+        return tokens
+    if tokens % target == 0:
+        return target
+    g = target
+    while g > 1 and tokens % g != 0:
+        g -= 1
+    return g
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def init_moe(key, cfg, dtype=jnp.float32):
+    mcfg = cfg.moe
+    d, f, E = cfg.d_model, cfg.d_ff, mcfg.n_experts
+    kr, kg, ku, kd, ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(kr, (d, E), dtype=jnp.float32),
+        "w_gate": dense_init(kg, (E, d, f), dtype),
+        "w_up": dense_init(ku, (E, d, f), dtype),
+        "w_down": dense_init(kd, (E, f, d), dtype, scale=f**-0.5),
+    }
+    if mcfg.shared_d_ff:
+        p["shared"] = init_mlp(ks, cfg, d_ff=mcfg.shared_d_ff, dtype=dtype)
+    return p
+
+
+def moe_apply(cfg, params, x):
+    """x (B, S, D) -> (y (B, S, D), aux) with aux = {"lb_loss": scalar}."""
+    mcfg = cfg.moe
+    B, S, D = x.shape
+    E, K = mcfg.n_experts, mcfg.top_k
+    tokens = B * S
+    G = _group_size(tokens)
+    n_g = tokens // G
+    C = max(1, _round_up(int(G * K * mcfg.capacity_factor / E + 0.999), 4))
+    C = min(C, G * K)
+
+    xg = x.reshape(n_g, G, D)
+    xg = constrain(xg, ("data", None, None))
+
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)            # (g, G, E)
+    gates, idx = jax.lax.top_k(probs, K)               # (g, G, K)
+    gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+
+    oh = jax.nn.one_hot(idx, E, dtype=jnp.float32)     # (g, G, K, E)
+
+    # choice-major priority ranking within each expert
+    # rank contribution of earlier choices (all tokens) + earlier tokens (same choice)
+    counts_per_choice = jnp.sum(oh, axis=1)            # (g, K, E)
+    prev_choice = jnp.cumsum(counts_per_choice, axis=1) - counts_per_choice  # (g, K, E)
+    within = jnp.cumsum(oh, axis=1) - oh               # (g, G, K, E)
+    rank = within + prev_choice[:, None]               # (g, G, K, E)
+    rank_sel = jnp.sum(rank * oh, axis=-1)             # (g, G, K)
+    keep = (rank_sel < C).astype(jnp.float32)
+
+    pos_oh = jax.nn.one_hot(
+        jnp.minimum(rank_sel, C - 1).astype(jnp.int32), C, dtype=jnp.float32
+    )
+    disp_k = oh[..., None] * pos_oh[..., None, :] * keep[..., None, None]  # (g,G,K,E,C)
+    dispatch = jnp.sum(disp_k, axis=2)                 # (g, G, E, C)
+    combine = jnp.sum(disp_k * gates[..., None, None], axis=2)             # (g, G, E, C)
+
+    xe = jnp.einsum("gtec,gtd->egcd", dispatch.astype(x.dtype), xg)        # (E, g, C, D)
+    xe = constrain(xe, ("model", "data", None, None))
+
+    h_gate = jnp.einsum("egcd,edf->egcf", xe, params["w_gate"])
+    h_up = jnp.einsum("egcd,edf->egcf", xe, params["w_up"])
+    if cfg.act in ("swiglu", "geglu"):
+        act = jax.nn.silu(h_gate) if cfg.act == "swiglu" else jax.nn.gelu(h_gate)
+        h = act * h_up
+    else:
+        h = jax.nn.gelu(h_up)
+    eo = jnp.einsum("egcf,efd->egcd", h, params["w_down"])
+    eo = constrain(eo, ("model", "data", None, None))
+
+    y = jnp.einsum("gtec,egcd->gtd", combine.astype(x.dtype), eo)          # (g, G, D)
+    y = constrain(y, ("data", None, None))
+    y = y.reshape(B, S, D)
+
+    if "shared" in params:
+        y = y + mlp(cfg, params["shared"], x)
+
+    # GShard load-balance auxiliary (reported; backbone is frozen under FedNano)
+    frac_tokens = jnp.mean(oh[:, :, 0, :], axis=1)     # (g, E) top-1 assignment share
+    mean_prob = jnp.mean(probs, axis=1)                # (g, E)
+    lb = E * jnp.mean(jnp.sum(frac_tokens * mean_prob, axis=-1))
+    return y, {"lb_loss": lb}

@@ -1,0 +1,136 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Recurrence (per channel):
+    r_t = sigmoid(W_a x_t + b_a)            recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)            input gate
+    a_t = exp(-c · softplus(Λ) · r_t)       c = 8
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+TPU adaptation: train/prefill runs the linear recurrence with
+``jax.lax.associative_scan`` (log-depth, VPU-friendly) instead of a CUDA
+sequential kernel; decode is the O(1) step.
+
+Block layout (the "recurrent block" of Griffin):
+    u -> [branch A: linear -> GeLU] ⊙ [branch B: linear -> conv1d -> RG-LRU] -> linear
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+from repro.sharding import constrain
+
+_C = 8.0
+
+
+class RGLRUState(NamedTuple):
+    conv: jax.Array  # (B, conv_width-1, d_rnn)
+    h: jax.Array     # (B, d_rnn) f32
+
+
+def _d_rnn(cfg):
+    return cfg.rglru.d_rnn or cfg.d_model
+
+
+def init_rglru(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    dr = _d_rnn(cfg)
+    cw = cfg.rglru.conv_width
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    # Λ init so that a ∈ (0.9, 0.999) at r = 1 (paper App. A)
+    lam = jax.random.uniform(k6, (dr,), minval=0.9**2, maxval=0.999**2)
+    lam = jnp.log(jnp.expm1(-jnp.log(lam) / (2 * _C)))  # inverse of a = exp(-c softplus(Λ))
+    return {
+        "w_gate_branch": dense_init(k1, (d, dr), dtype),
+        "w_rec_branch": dense_init(k2, (d, dr), dtype),
+        "conv_w": (jax.random.normal(k3, (cw, dr)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((dr,), dtype),
+        "w_a": dense_init(k4, (dr, dr), dtype),
+        "b_a": jnp.zeros((dr,), jnp.float32),
+        "w_x": dense_init(k5, (dr, dr), dtype),
+        "b_x": jnp.zeros((dr,), jnp.float32),
+        "w_out": dense_init(jax.random.fold_in(key, 7), (dr, d), dtype, scale=dr**-0.5),
+        "lam": lam.astype(jnp.float32),
+    }
+
+
+def _causal_conv(params, x):
+    w = params["conv_w"].astype(x.dtype)
+    cw = w.shape[0]
+    pads = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(cw):
+        out = out + pads[:, i : i + x.shape[1]] * w[i]
+    return out + params["conv_b"].astype(x.dtype)
+
+
+def _gates(params, x):
+    """x (..., dr) -> (log_a, beta·gated-input multiplier) in f32."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ params["w_a"].astype(jnp.float32) + params["b_a"])
+    i = jax.nn.sigmoid(xf @ params["w_x"].astype(jnp.float32) + params["b_x"])
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r         # (..., dr), ≤ 0
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12))
+    return a, beta * i * xf
+
+
+def rglru_scan(params, x):
+    """Full-sequence RG-LRU via associative scan. x (B, S, dr) -> (B, S, dr)."""
+    a, b = _gates(params, x)  # both (B, S, dr) f32
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return hh.astype(x.dtype), (aa, hh)
+
+
+def rglru_block(cfg, params, u):
+    """Full recurrent block. u (B, S, D) -> (B, S, D)."""
+    gate = jax.nn.gelu((u @ params["w_gate_branch"]).astype(jnp.float32)).astype(u.dtype)
+    rec_in = _causal_conv(params, u @ params["w_rec_branch"])
+    rec_in = constrain(rec_in, ("data", None, "model"))
+    h, _ = rglru_scan(params, rec_in)
+    y = (h * gate) @ params["w_out"]
+    return constrain(y, ("data", None, None))
+
+
+def init_rglru_state(cfg, batch: int, dtype) -> RGLRUState:
+    dr = _d_rnn(cfg)
+    cw = cfg.rglru.conv_width
+    return RGLRUState(
+        conv=jnp.zeros((batch, cw - 1, dr), dtype),
+        h=jnp.zeros((batch, dr), jnp.float32),
+    )
+
+
+def rglru_block_prefill(cfg, params, u):
+    """Full block + terminal RGLRUState for decode."""
+    gate = jax.nn.gelu((u @ params["w_gate_branch"]).astype(jnp.float32)).astype(u.dtype)
+    pre_conv = u @ params["w_rec_branch"]
+    rec_in = _causal_conv(params, pre_conv)
+    h, (_, hh) = rglru_scan(params, rec_in)
+    y = (h * gate) @ params["w_out"]
+    cw = cfg.rglru.conv_width
+    state = RGLRUState(conv=pre_conv[:, -(cw - 1) :, :], h=hh[:, -1].astype(jnp.float32))
+    return y, state
+
+
+def rglru_block_step(cfg, params, u, state: RGLRUState):
+    """One-token decode. u (B, 1, D) -> (out (B, 1, D), new state)."""
+    x = u[:, 0]
+    gate = jax.nn.gelu((x @ params["w_gate_branch"]).astype(jnp.float32)).astype(x.dtype)
+    pre = x @ params["w_rec_branch"]  # (B, dr)
+    window = jnp.concatenate([state.conv, pre[:, None, :]], axis=1)
+    w = params["conv_w"].astype(pre.dtype)
+    rec_in = jnp.sum(window * w[None], axis=1) + params["conv_b"].astype(pre.dtype)
+    a, b = _gates(params, rec_in)  # (B, dr)
+    h_new = a * state.h + b
+    y = (h_new.astype(x.dtype) * gate) @ params["w_out"]
+    return y[:, None, :], RGLRUState(conv=window[:, 1:], h=h_new)

@@ -1,0 +1,44 @@
+"""Modality-frontend STUBS (the one sanctioned carve-out).
+
+For VLM archs the ViT/SigLIP tower, and for audio the mel+conv codec, are not
+implemented — ``frame_embeddings``/``patch_embeddings`` return deterministic
+pseudo-embeddings of the correct shape/dtype, standing in for "precomputed
+frontend output". The frozen *connector* (projection to d_model) and
+everything downstream are real.
+
+The synthetic data pipeline (repro.data) also routes through these so the
+planted topic structure survives: embeddings are a function of the latent
+topic vector, giving 𝒜_I something real to adapt.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def num_patches(cfg) -> int:
+    """Patch/frame count fed to the connector for each image/audio clip."""
+    if cfg.family == "audio":
+        return cfg.enc_seq_len
+    if cfg.name.startswith("minigpt4"):
+        return 32  # Q-Former emits 32 query embeddings
+    return 64  # ViT patch grid after merger (stand-in)
+
+
+def patch_embeddings(key, cfg, batch: int, dtype=jnp.float32):
+    """Deterministic pseudo patch/frame embeddings (B, M, frontend_dim)."""
+    m = num_patches(cfg)
+    return jax.random.normal(key, (batch, m, cfg.frontend_dim)).astype(dtype)
+
+
+def topic_patch_embeddings(key, cfg, topic_vecs, dtype=jnp.float32):
+    """Patch embeddings whose mean is steered by a per-example topic vector.
+
+    topic_vecs (B, frontend_dim) — the planted cluster structure used by the
+    synthetic VQA pipeline so that non-IID topic splits induce real
+    visual-representation shift (DESIGN.md §6.1).
+    """
+    b = topic_vecs.shape[0]
+    m = num_patches(cfg)
+    noise = jax.random.normal(key, (b, m, cfg.frontend_dim)) * 0.5
+    return (topic_vecs[:, None, :] + noise).astype(dtype)

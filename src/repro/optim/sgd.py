@@ -1,0 +1,26 @@
+"""SGD with optional momentum."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import tree_zeros_like
+
+
+class SGDState(NamedTuple):
+    velocity: dict
+
+
+def sgd_init(params) -> SGDState:
+    return SGDState(velocity=tree_zeros_like(params))
+
+
+def sgd_update(grads, state: SGDState, params, *, lr: float, momentum: float = 0.0):
+    if momentum:
+        vel = jax.tree.map(lambda v, g: momentum * v + g, state.velocity, grads)
+    else:
+        vel = grads
+    new_params = jax.tree.map(lambda p, v: (p - lr * v).astype(p.dtype), params, vel)
+    return new_params, SGDState(velocity=vel if momentum else state.velocity)

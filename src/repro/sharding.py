@@ -1,0 +1,105 @@
+"""Mesh-aware sharding constraints usable from model code.
+
+Model code calls ``constrain(x, ("data", None, "model"))`` with *logical* axis
+names. When no mesh is active (unit tests, CPU smoke runs) this is an
+identity; under ``use_mesh(mesh)`` (set by the launcher / dry-run) it becomes
+``jax.lax.with_sharding_constraint`` — axis names that don't exist on the
+active mesh are dropped, and axes whose dimension size does not divide evenly
+are dropped too (DESIGN.md §5 fallback rules: qwen1.5 20 heads, glm4 kv=2,
+odd vocabs).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh]):
+    """Activate ``mesh`` for :func:`constrain` calls in model code.
+
+    We track the mesh in a thread-local (rather than entering a global jax
+    mesh context) — ``with_sharding_constraint`` takes a ``NamedSharding``
+    that carries its own mesh, so no ambient context is required and unit
+    tests stay unaffected.
+    """
+    prev = getattr(_state, "mesh", None)
+    _state.mesh = mesh
+    try:
+        yield mesh
+    finally:
+        _state.mesh = prev
+
+
+AxisName = Union[None, str, Tuple[str, ...]]
+
+# Logical-axis aliases: model code says "data" for the batch axis; on the
+# multi-pod mesh batch parallelism spans ("pod", "data"). The resolver
+# expands the alias and then drops whatever axes the active mesh lacks.
+AXIS_ALIASES = {"data": ("pod", "data")}
+
+
+def _filter_axes(mesh: Mesh, dim_size: int, axes: AxisName) -> AxisName:
+    """Expand aliases, drop axes absent from the mesh; drop if non-divisible."""
+    if axes is None:
+        return None
+    tup = (axes,) if isinstance(axes, str) else tuple(axes)
+    expanded = []
+    for a in tup:
+        repl = AXIS_ALIASES.get(a, (a,))
+        expanded.extend(repl if isinstance(repl, tuple) else (repl,))
+    # de-dup while preserving order (alias expansion can repeat "data")
+    seen = set()
+    tup = tuple(a for a in expanded if not (a in seen or seen.add(a)))
+    tup = tuple(a for a in tup if a in mesh.axis_names)
+    if not tup:
+        return None
+    total = 1
+    for a in tup:
+        total *= mesh.shape[a]
+    if dim_size % total != 0:
+        return None
+    return tup if len(tup) > 1 else tup[0]
+
+
+def resolve_spec(mesh: Mesh, shape: Sequence[int], spec: Sequence[AxisName]) -> P:
+    assert len(shape) == len(spec), (shape, spec)
+    return P(*[_filter_axes(mesh, d, a) for d, a in zip(shape, spec)])
+
+
+def constrain(x, spec: Sequence[AxisName]):
+    """Soft sharding constraint with logical axis names (identity w/o mesh)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    if x.ndim != len(spec):
+        return x
+    p = resolve_spec(mesh, x.shape, spec)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, p))
+
+
+def named_sharding(mesh: Mesh, shape: Sequence[int], spec: Sequence[AxisName]) -> NamedSharding:
+    return NamedSharding(mesh, resolve_spec(mesh, shape, spec))
+
+
+def residual_spec(cfg):
+    """Sharding of the (B, S, D) residual stream between blocks.
+
+    seq_parallel=True (Megatron-SP, DESIGN/EXPERIMENTS §Perf): sequence over
+    the model axis — partial-sum block outputs lower to reduce-scatter and
+    block inputs to all-gather (both bf16) instead of full fp32 all-reduces,
+    and the fp32 norm arithmetic runs on 1/model_size of the tokens.
+    """
+    if getattr(cfg, "seq_parallel", False):
+        return ("data", "model", None)
+    return ("data", None, None)

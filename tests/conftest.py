@@ -1,0 +1,11 @@
+import jax
+import pytest
+
+# Tests run on the real 1-CPU topology (the 512-device flag belongs ONLY to
+# repro.launch.dryrun). Keep everything float32 + tiny.
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,107 @@
+"""NanoAdapter / NanoEdge / Fisher-estimation unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import Batch, FisherAccumulator, adapters as A, fisher as F
+from repro.utils import tree_allclose, tree_size
+
+
+def test_adapter_identity_at_init(rng):
+    """Zero-init up-projection => adapter is exact identity at round 0."""
+    p = A.init_nano_adapter(rng, 32, 4)
+    x = jax.random.normal(rng, (2, 5, 32))
+    y = A.nano_adapter_apply(p, x, rank=4, alpha=8.0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), rtol=1e-6)
+
+
+def test_adapter_scale(rng):
+    p = A.init_nano_adapter(rng, 16, 4)
+    p["up"] = jax.random.normal(rng, (4, 16)) * 0.1
+    x = jax.random.normal(rng, (3, 16))
+    y8 = A.nano_adapter_apply(p, x, rank=4, alpha=8.0)
+    y16 = A.nano_adapter_apply(p, x, rank=4, alpha=16.0)
+    np.testing.assert_allclose(
+        np.asarray(y16 - x), 2 * np.asarray(y8 - x), rtol=1e-4, atol=1e-6
+    )
+
+
+def test_adapter_pallas_matches_jnp(rng):
+    p = A.init_nano_adapter(rng, 64, 8)
+    p["up"] = jax.random.normal(rng, (8, 64)) * 0.1
+    x = jax.random.normal(rng, (2, 10, 64))
+    y1 = A.nano_adapter_apply(p, x, rank=8, alpha=16.0, use_pallas=False)
+    y2 = A.nano_adapter_apply(p, x, rank=8, alpha=16.0, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-5, atol=1e-6)
+
+
+def test_nanoedge_param_count_matches_analytic(rng):
+    cfg = get_smoke_config("llava-1.5-7b")
+    adp = A.init_nanoedge(rng, cfg)
+    assert tree_size(adp) == A.adapter_param_count(cfg)
+    assert set(adp) == {"text", "image"}
+
+
+def test_vlm_image_prefix_is_unsupervised(rng):
+    cfg = get_smoke_config("llava-1.5-7b")
+    from repro.models import model as M
+    from repro.models.vision_stub import num_patches
+
+    backbone = M.init_backbone(rng, cfg)
+    adp = A.init_nanoedge(rng, cfg)
+    b, s = 2, 12
+    m = num_patches(cfg)
+    batch = Batch(
+        tokens=jax.random.randint(rng, (b, s), 0, cfg.vocab_size),
+        labels=jnp.zeros((b, s), jnp.int32),
+        mask=jnp.ones((b, s), jnp.float32),
+        patches=jax.random.normal(rng, (b, m, cfg.frontend_dim)),
+    )
+    embeds, positions, labels, mask, enc = A.nanoedge_forward(cfg, backbone, adp, batch)
+    assert embeds.shape[1] == m + s
+    assert float(jnp.sum(mask[:, :m])) == 0.0, "image prefix must be unsupervised"
+    assert positions.shape == (b, m + s)
+
+
+def test_fisher_accumulator(rng):
+    params = {"a": jnp.zeros((3,))}
+    acc = FisherAccumulator.init(params)
+    g1 = {"a": jnp.array([1.0, 2.0, 3.0])}
+    g2 = {"a": jnp.array([3.0, 0.0, 1.0])}
+    acc = acc.update(g1).update(g2)
+    fim = acc.finalize(eps=0.0)
+    np.testing.assert_allclose(np.asarray(fim["a"]), [(1 + 9) / 2, 4 / 2, (9 + 1) / 2])
+
+
+def test_fisher_pass_equals_mean_sq_grads(rng):
+    def grad_fn(p, batch):
+        return {"w": 2.0 * p["w"] * batch}
+
+    p = {"w": jnp.array([1.0, -1.0])}
+    batches = [jnp.float32(1.0), jnp.float32(2.0)]
+    fim = F.fisher_pass(grad_fn, p, batches, eps=0.0)
+    # grads: [2, -2] and [4, -4] -> mean sq = (4+16)/2 = 10
+    np.testing.assert_allclose(np.asarray(fim["w"]), [10.0, 10.0])
+
+
+def test_backbone_truly_frozen(rng):
+    """grad of fednano_loss w.r.t. adapters must leave the backbone untouched
+    AND produce zero cotangent for it if requested."""
+    cfg = get_smoke_config("h2o-danube-1.8b")
+    from repro.models import model as M
+
+    backbone = M.init_backbone(rng, cfg)
+    adp = A.init_nanoedge(rng, cfg)
+    batch = Batch(
+        tokens=jax.random.randint(rng, (2, 8), 0, cfg.vocab_size),
+        labels=jax.random.randint(rng, (2, 8), 0, cfg.vocab_size),
+        mask=jnp.ones((2, 8), jnp.float32),
+    )
+    before = jax.tree.map(jnp.copy, backbone)
+    loss, grads = jax.value_and_grad(
+        lambda a: A.fednano_loss(cfg, backbone, a, batch)[0]
+    )(adp)
+    assert tree_allclose(backbone, before)
+    assert set(grads) == set(adp)

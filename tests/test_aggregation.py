@@ -1,0 +1,116 @@
+"""Fisher-merge / FedAvg properties — unit + hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.aggregation import aggregate, fedavg, fisher_merge
+from repro.utils import tree_allclose
+
+
+def _tree(key, scale=1.0):
+    k1, k2 = jax.random.split(key)
+    return {
+        "text": {"down": jax.random.normal(k1, (8, 4)) * scale,
+                 "up": jax.random.normal(k2, (4, 8)) * scale},
+    }
+
+
+def test_fedavg_equal_weights_is_mean(rng):
+    trees = [_tree(jax.random.fold_in(rng, i)) for i in range(3)]
+    merged = fedavg(trees, None)
+    want = jax.tree.map(lambda *xs: sum(xs) / 3, *trees)
+    assert tree_allclose(merged, want, rtol=1e-6)
+
+
+def test_fedavg_weighted(rng):
+    trees = [_tree(jax.random.fold_in(rng, i)) for i in range(2)]
+    merged = fedavg(trees, [3, 1])
+    want = jax.tree.map(lambda a, b: 0.75 * a + 0.25 * b, *trees)
+    assert tree_allclose(merged, want, rtol=1e-6)
+
+
+def test_fisher_merge_k1_identity(rng):
+    t = _tree(rng)
+    f = jax.tree.map(lambda x: jnp.abs(x) + 0.1, t)
+    merged = fisher_merge([t], [f], [5])
+    assert tree_allclose(merged, t, rtol=1e-5, atol=1e-5)
+
+
+def test_fisher_merge_equal_fisher_reduces_to_fedavg(rng):
+    trees = [_tree(jax.random.fold_in(rng, i)) for i in range(3)]
+    ones = jax.tree.map(jnp.ones_like, trees[0])
+    merged = fisher_merge(trees, [ones] * 3, [1, 2, 3])
+    want = fedavg(trees, [1, 2, 3])
+    assert tree_allclose(merged, want, rtol=1e-5, atol=1e-6)
+
+
+def test_fisher_merge_dominant_fisher_wins(rng):
+    """A client with overwhelming Fisher mass should dominate the merge."""
+    t1, t2 = _tree(rng), _tree(jax.random.fold_in(rng, 1))
+    big = jax.tree.map(lambda x: jnp.full_like(x, 1e6), t1)
+    small = jax.tree.map(lambda x: jnp.full_like(x, 1e-6), t2)
+    merged = fisher_merge([t1, t2], [big, small], None)
+    assert tree_allclose(merged, t1, rtol=1e-3, atol=1e-4)
+
+
+def test_fisher_merge_permutation_invariant(rng):
+    trees = [_tree(jax.random.fold_in(rng, i)) for i in range(3)]
+    fs = [jax.tree.map(lambda x: jnp.abs(x) + 0.5, t) for t in trees]
+    m1 = fisher_merge(trees, fs, [1, 2, 3])
+    m2 = fisher_merge(trees[::-1], fs[::-1], [3, 2, 1])
+    assert tree_allclose(m1, m2, rtol=1e-5, atol=1e-6)
+
+
+def test_fisher_merge_fisher_scale_invariant(rng):
+    """Multiplying every F_k by the same constant must not change Eq. 1."""
+    trees = [_tree(jax.random.fold_in(rng, i)) for i in range(2)]
+    fs = [jax.tree.map(lambda x: jnp.abs(x) + 0.5, t) for t in trees]
+    fs_scaled = [jax.tree.map(lambda x: x * 1000.0, f) for f in fs]
+    m1 = fisher_merge(trees, fs, [1, 1])
+    m2 = fisher_merge(trees, fs_scaled, [1, 1])
+    assert tree_allclose(m1, m2, rtol=1e-4, atol=1e-5)
+
+
+def test_pallas_path_matches_jnp_path(rng):
+    trees = [_tree(jax.random.fold_in(rng, i)) for i in range(4)]
+    fs = [jax.tree.map(lambda x: jnp.abs(x) + 0.2, t) for t in trees]
+    m1 = fisher_merge(trees, fs, [1, 2, 3, 4], use_pallas=False)
+    m2 = fisher_merge(trees, fs, [1, 2, 3, 4], use_pallas=True)
+    assert tree_allclose(m1, m2, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    vals=st.lists(
+        st.lists(st.floats(-10, 10), min_size=4, max_size=4),
+        min_size=2, max_size=5,
+    ),
+    fish=st.lists(
+        st.lists(st.floats(1e-3, 1e3), min_size=4, max_size=4),
+        min_size=2, max_size=5,
+    ),
+)
+def test_merge_within_convex_hull(vals, fish):
+    """Eq. 1 is a convex combination per coordinate: the merged value lies in
+    [min_k θ_k, max_k θ_k] elementwise (up to eps slack)."""
+    k = min(len(vals), len(fish))
+    thetas = [{"w": jnp.asarray(v[:4], jnp.float32)} for v in vals[:k]]
+    fishers = [{"w": jnp.asarray(f[:4], jnp.float32)} for f in fish[:k]]
+    merged = fisher_merge(thetas, fishers, None)["w"]
+    lo = jnp.min(jnp.stack([t["w"] for t in thetas]), axis=0)
+    hi = jnp.max(jnp.stack([t["w"] for t in thetas]), axis=0)
+    assert bool(jnp.all(merged >= lo - 1e-3)), (merged, lo)
+    assert bool(jnp.all(merged <= hi + 1e-3)), (merged, hi)
+
+
+def test_aggregate_registry(rng):
+    trees = [_tree(jax.random.fold_in(rng, i)) for i in range(2)]
+    fs = [jax.tree.map(jnp.ones_like, t) for t in trees]
+    assert aggregate("locft", trees, fs, [1, 1]) is None
+    for s in ("fednano", "fednano_ef", "fedavg", "fedprox", "feddpa_f"):
+        out = aggregate(s, trees, fs, [1, 1])
+        assert out is not None
+    with pytest.raises(ValueError):
+        aggregate("nope", trees, fs, [1, 1])

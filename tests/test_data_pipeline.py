@@ -1,0 +1,84 @@
+"""Data pipeline: Dirichlet partition invariants (hypothesis) + corpus checks."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_smoke_config
+from repro.data import SyntheticVQA, dirichlet_partition, make_federated_data, partition_stats
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n_items=st.integers(20, 200),
+    n_clients=st.integers(2, 8),
+    alpha=st.floats(0.05, 10.0),
+    seed=st.integers(0, 1000),
+)
+def test_partition_covers_and_disjoint(n_items, n_clients, alpha, seed):
+    rng = np.random.RandomState(seed)
+    items = list(range(n_items))
+    topics = rng.randint(0, 6, size=n_items)
+    shards = dirichlet_partition(items, topics, n_clients, alpha, seed=seed, min_per_client=1)
+    got = sorted(x for shard in shards.values() for x in shard)
+    assert got == items, "partition must be a disjoint cover"
+    assert set(shards) == set(range(n_clients))
+    assert all(len(s) >= 1 for s in shards.values())
+
+
+def test_small_alpha_more_skewed():
+    """Dirichlet concentration: smaller α ⇒ more per-client topic skew."""
+    rng = np.random.RandomState(0)
+    items = list(range(4000))
+    topics = rng.randint(0, 8, size=4000)
+
+    def skew(alpha):
+        shards = dirichlet_partition(items, topics, 5, alpha, seed=1)
+        stats = partition_stats(shards, lambda i: topics[i])
+        # mean over clients of (max topic share)
+        vals = []
+        for hist in stats.values():
+            tot = sum(hist.values())
+            vals.append(max(hist.values()) / tot if tot else 0)
+        return float(np.mean(vals))
+
+    assert skew(0.1) > skew(5.0) + 0.05, (skew(0.1), skew(5.0))
+
+
+def test_synthetic_corpus_structure():
+    gen = SyntheticVQA(vocab_size=512, seq_len=24, frontend_dim=32, n_patches=8)
+    ex = gen.generate(50, seed=3)
+    assert len(ex) == 50
+    for e in ex[:10]:
+        assert e.tokens.shape == (24,)
+        assert e.labels.shape == (24,)
+        assert float(e.mask.sum()) == 1.0  # exactly the answer position
+        ans_pos = int(np.argmax(e.mask))
+        # label at the supervised position is the answer token
+        assert gen.tok.is_answer(int(e.labels[ans_pos]))
+        assert e.image.shape == (8, 32)
+
+
+def test_answer_depends_on_topic_and_detail():
+    gen = SyntheticVQA(vocab_size=512)
+    a00, a01 = gen.answer_of(0, 0), gen.answer_of(0, 1)
+    a10 = gen.answer_of(1, 0)
+    assert a00 != a01 or a00 != a10  # non-degenerate mapping
+
+
+def test_cross_task_ids_shift_distribution():
+    g0 = SyntheticVQA(vocab_size=512, task_id=0)
+    g1 = SyntheticVQA(vocab_size=512, task_id=1)
+    assert g0.answer_of(0, 0) != g1.answer_of(0, 0)
+
+
+def test_make_federated_data_batches(rng):
+    cfg = get_smoke_config("llava-1.5-7b")
+    train, evald, gen = make_federated_data(
+        cfg, n_clients=3, examples_per_client=24, alpha=1.0, batch_size=4, seq_len=20
+    )
+    assert set(train) == {0, 1, 2}
+    for cid in train:
+        assert len(train[cid]) >= 1
+        b = train[cid][0]
+        assert b.tokens.shape == (4, 20)
+        assert b.patches is not None and b.patches.shape[2] == cfg.frontend_dim

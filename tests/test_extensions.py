@@ -1,0 +1,165 @@
+"""Beyond-paper extensions: int8 upload compression with error feedback,
+rank-heterogeneous adapters, client-level DP."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import adapters as A
+from repro.core.compression import (
+    compress_update,
+    dequantize_delta,
+    init_error_feedback,
+    quantize_delta,
+)
+from repro.core.hetero import (
+    hetero_fisher_merge,
+    pad_adapter,
+    pad_nanoedge,
+    truncate_nanoedge,
+)
+from repro.core.privacy import clip_by_global_norm, dp_sigma, privatize_update
+from repro.utils import tree_allclose, tree_sub, tree_sq_norm
+
+
+# ---------------------------------------------------------------------------
+# compression
+# ---------------------------------------------------------------------------
+
+def test_quantize_roundtrip_error_bounded(rng):
+    delta = {"w": jax.random.normal(rng, (64, 32)) * 0.1}
+    q = quantize_delta(delta)
+    recon = dequantize_delta(q)
+    amax = float(jnp.max(jnp.abs(delta["w"])))
+    err = float(jnp.max(jnp.abs(recon["w"] - delta["w"])))
+    assert err <= amax / 127.0 + 1e-7  # half-step quantization bound
+    assert q.wire_bytes < q.base_bytes / 3.9  # ~4x compression
+
+
+def test_error_feedback_unbiased_over_rounds(rng):
+    """Cumulative reconstructed delta converges to the cumulative true delta."""
+    k = rng
+    err = init_error_feedback({"w": jnp.zeros((32, 8))})
+    global_ref = {"w": jnp.zeros((32, 8))}
+    total_true = jnp.zeros((32, 8))
+    total_recon = jnp.zeros((32, 8))
+    for step in range(6):
+        k = jax.random.fold_in(k, step)
+        adapters = {"w": total_true + jax.random.normal(k, (32, 8)) * 0.05}
+        true_delta = adapters["w"] - total_true
+        q, err, recon = compress_update(adapters, {"w": total_true}, err)
+        total_recon = total_recon + recon["w"]
+        total_true = adapters["w"]
+    # residual is bounded by one quantization step, not accumulated drift
+    resid = float(jnp.max(jnp.abs(total_recon - total_true)))
+    amax = float(jnp.max(jnp.abs(err["w"])))
+    assert resid < 0.02, resid
+
+
+def test_compression_wire_accounting(rng):
+    delta = {"a": jnp.ones((100,)), "b": jnp.ones((10, 10))}
+    q = quantize_delta(delta)
+    assert q.base_bytes == 200 * 4
+    assert q.wire_bytes == 200 * 1 + 2 * 4
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous ranks
+# ---------------------------------------------------------------------------
+
+def _adapter(key, d, r, scale=0.1):
+    k1, k2 = jax.random.split(key)
+    return {
+        "down": jax.random.normal(k1, (d, r)) * scale,
+        "up": jax.random.normal(k2, (r, d)) * scale,
+    }
+
+
+def test_pad_preserves_adapter_function(rng):
+    d, r, rmax = 16, 4, 8
+    adp = _adapter(rng, d, r)
+    padded = pad_adapter(adp, rmax)
+    x = jax.random.normal(rng, (5, d))
+    y1 = A.nano_adapter_apply(adp, x, rank=r, alpha=2.0 * r)
+    # same alpha/rank SCALE must be used for the padded pair to be identical
+    y2 = A.nano_adapter_apply(padded, x, rank=r, alpha=2.0 * r)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-6)
+
+
+def test_hetero_merge_shapes_and_zero_fisher_on_padding(rng):
+    d = 16
+    ranks = [2, 4, 8]
+    thetas, fishers = [], []
+    for i, r in enumerate(ranks):
+        adp = {"text": _adapter(jax.random.fold_in(rng, i), d, r)}
+        thetas.append(adp)
+        fishers.append(jax.tree.map(lambda x: jnp.abs(x) + 0.1, adp))
+    merged = hetero_fisher_merge(thetas, fishers, ranks)
+    assert merged["text"]["down"].shape == (d, 8)
+    assert merged["text"]["up"].shape == (8, d)
+    # coordinates where ONLY the rank-8 client has mass equal its values
+    np.testing.assert_allclose(
+        np.asarray(merged["text"]["down"][:, 4:]),
+        np.asarray(thetas[2]["text"]["down"][:, 4:]),
+        rtol=1e-4, atol=1e-5,
+    )
+
+
+def test_truncate_roundtrip(rng):
+    adp = {"text": _adapter(rng, 16, 8)}
+    t = truncate_nanoedge(adp, 4)
+    assert t["text"]["down"].shape == (16, 4)
+    p = pad_nanoedge(t, 8)
+    np.testing.assert_allclose(
+        np.asarray(p["text"]["down"][:, :4]), np.asarray(adp["text"]["down"][:, :4])
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(r1=st.integers(1, 6), r2=st.integers(1, 6))
+def test_hetero_merge_convex_hull(r1, r2):
+    key = jax.random.PRNGKey(r1 * 7 + r2)
+    d = 8
+    rmax = max(r1, r2)
+    t1 = {"text": _adapter(key, d, r1)}
+    t2 = {"text": _adapter(jax.random.fold_in(key, 1), d, r2)}
+    merged = hetero_fisher_merge([t1, t2], [None, None], [r1, r2])
+    lo = jnp.minimum(
+        pad_nanoedge(t1, rmax)["text"]["down"], pad_nanoedge(t2, rmax)["text"]["down"]
+    )
+    hi = jnp.maximum(
+        pad_nanoedge(t1, rmax)["text"]["down"], pad_nanoedge(t2, rmax)["text"]["down"]
+    )
+    m = merged["text"]["down"]
+    assert bool(jnp.all(m >= lo - 1e-4)) and bool(jnp.all(m <= hi + 1e-4))
+
+
+# ---------------------------------------------------------------------------
+# privacy
+# ---------------------------------------------------------------------------
+
+def test_clip_by_global_norm(rng):
+    t = {"w": jnp.full((10,), 3.0)}
+    clipped, norm = clip_by_global_norm(t, 1.0)
+    assert abs(float(jnp.sqrt(tree_sq_norm(clipped))) - 1.0) < 1e-5
+    small = {"w": jnp.full((10,), 0.01)}
+    unclipped, _ = clip_by_global_norm(small, 1.0)
+    assert tree_allclose(unclipped, small, rtol=1e-6)
+
+
+def test_privatize_update_noise_scales(rng):
+    ref = {"w": jnp.zeros((2000,))}
+    adp = {"w": jnp.ones((2000,)) * 0.001}
+    theta, info = privatize_update(rng, adp, ref, clip_norm=1.0, noise_mult=0.5)
+    noise = tree_sub(theta, adp)
+    std = float(jnp.std(noise["w"]))
+    assert 0.4 < std < 0.6  # ≈ noise_mult * clip_norm
+    theta0, _ = privatize_update(rng, adp, ref, clip_norm=1.0, noise_mult=0.0)
+    assert tree_allclose(theta0, adp, rtol=1e-6)
+
+
+def test_dp_sigma_monotone():
+    assert dp_sigma(1.0, 1e-5) > dp_sigma(4.0, 1e-5)
+    with pytest.raises(ValueError):
+        dp_sigma(0.0, 1e-5)

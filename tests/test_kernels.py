@@ -1,0 +1,144 @@
+"""Per-kernel correctness: shape/dtype sweeps, assert_allclose vs ref oracle.
+
+All Pallas kernels run interpret=True (CPU executes the kernel body in
+Python) — the target is TPU, correctness is proven here.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.fisher_merge import ops as fm_ops, ref as fm_ref
+from repro.kernels.flash_attention import ops as fa_ops, ref as fa_ref
+from repro.kernels.lora import ops as lora_ops, ref as lora_ref
+from repro.kernels.ssd_scan import ops as ssd_ops, ref as ssd_ref
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# lora
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(5, 32), (2, 100, 128), (1, 3, 64, 256)])
+@pytest.mark.parametrize("rank", [4, 64])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_lora_kernel(shape, rank, dtype, rng):
+    d = shape[-1]
+    x = jax.random.normal(rng, shape, dtype)
+    down = (jax.random.normal(jax.random.fold_in(rng, 1), (d, rank)) * 0.05).astype(dtype)
+    up = (jax.random.normal(jax.random.fold_in(rng, 2), (rank, d)) * 0.05).astype(dtype)
+    got = lora_ops.lora_residual(x, down, up, scale=2.0, block_t=32, interpret=True)
+    want = lora_ref.lora_residual(x, down, up, scale=2.0)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+    )
+
+
+def test_lora_zero_up_is_identity(rng):
+    x = jax.random.normal(rng, (4, 64))
+    down = jax.random.normal(rng, (64, 8))
+    up = jnp.zeros((8, 64))
+    got = lora_ops.lora_residual(x, down, up, scale=2.0, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# fisher merge
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k", [1, 2, 5, 16])
+@pytest.mark.parametrize("n", [7, 1000, 4096])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fisher_merge_kernel(k, n, dtype, rng):
+    t = jax.random.normal(rng, (k, n), dtype)
+    f = jax.random.uniform(jax.random.fold_in(rng, 1), (k, n), minval=0.01).astype(dtype)
+    w = jax.random.uniform(jax.random.fold_in(rng, 2), (k,), minval=0.1)
+    got = fm_ops.fisher_merge(t, f, w, block_n=256, interpret=True)
+    want = fm_ref.fisher_merge(t, f, w)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+    )
+
+
+def test_fisher_merge_nd_leaf(rng):
+    t = jax.random.normal(rng, (3, 16, 8))
+    f = jax.random.uniform(rng, (3, 16, 8), minval=0.01)
+    w = jnp.array([1.0, 2.0, 3.0])
+    got = fm_ops.fisher_merge(t, f, w, interpret=True)
+    want = fm_ref.fisher_merge(t.reshape(3, -1), f.reshape(3, -1), w).reshape(16, 8)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+CASES = [
+    # B, Sq, Sk, H, Hkv, D, causal, window, softcap
+    (1, 128, 128, 4, 4, 64, True, None, 0.0),
+    (2, 96, 96, 4, 2, 64, True, None, 0.0),       # GQA + ragged blocks
+    (1, 256, 256, 8, 1, 64, True, 64, 0.0),       # MQA + sliding window
+    (1, 1, 257, 4, 2, 64, True, None, 0.0),       # decode-style single query
+    (2, 64, 64, 4, 4, 128, False, None, 0.0),     # bidirectional
+    (1, 128, 128, 2, 2, 64, True, None, 30.0),    # grok softcap
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_kernel(case, dtype, rng):
+    b, sq, sk, h, hkv, d, causal, window, cap = case
+    q = jax.random.normal(rng, (b, sq, h, d), dtype)
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (b, sk, hkv, d), dtype)
+    v = jax.random.normal(jax.random.fold_in(rng, 2), (b, sk, hkv, d), dtype)
+    got = fa_ops.flash_attention(
+        q, k, v, causal=causal, window=window, softcap=cap,
+        block_q=64, block_k=64, interpret=True,
+    )
+    want = fa_ref.attention(q, k, v, causal=causal, window=window, softcap=cap)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+    )
+
+
+# ---------------------------------------------------------------------------
+# ssd scan
+# ---------------------------------------------------------------------------
+
+SSD_CASES = [
+    # B, S, H, P, N, chunk
+    (1, 64, 2, 32, 16, 16),
+    (2, 100, 3, 64, 32, 32),   # ragged chunking
+    (1, 256, 4, 64, 128, 64),
+]
+
+
+@pytest.mark.parametrize("case", SSD_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_kernel_vs_sequential(case, dtype, rng):
+    b, s, h, p, n, q = case
+    x = (jax.random.normal(rng, (b, s, h, p)) * 0.5).astype(dtype)
+    dt = jax.random.uniform(jax.random.fold_in(rng, 1), (b, s, h), minval=0.01, maxval=0.2).astype(dtype)
+    A = -jax.random.uniform(jax.random.fold_in(rng, 2), (h,), minval=0.5, maxval=2.0)
+    B = (jax.random.normal(jax.random.fold_in(rng, 3), (b, s, n)) * 0.3).astype(dtype)
+    C = (jax.random.normal(jax.random.fold_in(rng, 4), (b, s, n)) * 0.3).astype(dtype)
+    want = ssd_ref.ssd_reference_sequential(x, dt, A, B, C)
+    got = ssd_ops.ssd(x, dt, A, B, C, chunk=q, interpret=True)
+    tol = dict(rtol=5e-2, atol=5e-2) if dtype == jnp.bfloat16 else dict(rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(want, np.float32), **tol)
+
+
+def test_ssd_chunked_oracle_matches_sequential(rng):
+    b, s, h, p, n = 2, 128, 2, 16, 8
+    x = jax.random.normal(rng, (b, s, h, p)) * 0.5
+    dt = jax.random.uniform(rng, (b, s, h), minval=0.01, maxval=0.3)
+    A = -jnp.ones((h,))
+    B = jax.random.normal(rng, (b, s, n)) * 0.3
+    C = jax.random.normal(rng, (b, s, n)) * 0.3
+    want = ssd_ref.ssd_reference_sequential(x, dt, A, B, C)
+    for chunk in (8, 32, 128):
+        got = ssd_ref.ssd_chunked(x, dt, A, B, C, chunk)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)

@@ -1,0 +1,119 @@
+"""System-level behaviour: the paper's efficiency claims + sharding rules.
+
+Tab. 1 claims (LLaVA-1.5-7B, rank-64 adapters):
+    server uploads ≈ 1.05M params (0.01% of the model)
+    client storage cut ≥ 95% vs full-model PEFT-FL
+These are analytic properties of the architecture — reproduced exactly.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import INPUT_SHAPES, get_config, get_smoke_config
+from repro.core.comm import (
+    adapter_upload_params,
+    backbone_param_count,
+    client_storage_params,
+)
+
+
+def test_table1_upload_params_match_paper():
+    cfg = get_config("llava-1.5-7b")
+    up = adapter_upload_params(cfg)
+    # 2 adapters × 2 × 4096 × 64 = 1,048,576 ≈ the paper's 1.05M
+    assert up == 2 * 2 * 4096 * 64
+    assert abs(up / 1e6 - 1.05) < 0.01
+
+
+def test_table1_upload_fraction_0p01_percent():
+    cfg = get_config("llava-1.5-7b")
+    total = backbone_param_count(cfg) + 303_500_000  # + vision tower stub
+    frac = adapter_upload_params(cfg) / total
+    assert frac < 2e-4, f"upload fraction {frac:.2e} should be ~0.01%"
+
+
+def test_table1_client_storage_reduction_over_90():
+    cfg = get_config("llava-1.5-7b")
+    s = client_storage_params(cfg)
+    reduction = 1 - s["fednano_client_total"] / s["peft_client_total"]
+    assert reduction > 0.90, f"client storage reduction {reduction:.3f}"
+    # and the paper's headline ≥95% holds for the 7B backbone
+    assert reduction > 0.95
+
+
+def test_backbone_param_count_close_to_materialized():
+    """Analytic count within 2% of the actually-initialized reduced model."""
+    from repro.models import model as M
+    from repro.utils import tree_size
+
+    for arch in ("h2o-danube-1.8b", "grok-1-314b", "mamba2-130m", "recurrentgemma-9b", "whisper-base"):
+        cfg = get_smoke_config(arch)
+        params = M.init_backbone(jax.random.PRNGKey(0), cfg)
+        got = tree_size(params)
+        want = backbone_param_count(cfg)
+        assert abs(got - want) / got < 0.02, f"{arch}: analytic {want} vs real {got}"
+
+
+def test_known_scale_param_counts():
+    """Full configs land near their nameplate sizes."""
+    approx = {
+        "h2o-danube-1.8b": (1.8e9, 0.25),
+        "glm4-9b": (9e9, 0.25),
+        "grok-1-314b": (314e9, 0.15),
+        "mamba2-130m": (130e6, 0.25),
+        "internlm2-20b": (20e9, 0.25),
+    }
+    for arch, (want, tol) in approx.items():
+        n = backbone_param_count(get_config(arch))
+        assert abs(n - want) / want < tol, f"{arch}: {n/1e9:.2f}B vs {want/1e9:.2f}B"
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+# ---------------------------------------------------------------------------
+
+def test_param_specs_follow_rules():
+    from repro.launch.sharding_rules import param_logical_spec
+
+    assert param_logical_spec(("layers", "attn", "wq"), (64, 128)) == (None, "model")
+    assert param_logical_spec(("layers", "attn", "wo"), (128, 64)) == ("model", None)
+    assert param_logical_spec(("layers", "mlp", "w_down"), (128, 64)) == ("model", None)
+    assert param_logical_spec(("embed", "table"), (1024, 64)) == ("model", None)
+    # grok experts: 8 % 16 != 0 -> 2D weight sharding over (data, model)
+    assert param_logical_spec(("layers", "moe", "w_up"), (8, 64, 128)) == (None, "data", "model")
+    # llama4 experts: 16 % 16 == 0 -> expert-parallel
+    assert param_logical_spec(("layers", "moe", "w_up"), (16, 64, 128)) == ("model", None, None)
+    assert param_logical_spec(("layers", "norm1", "scale"), (64,)) == (None,)
+
+
+def test_constrain_noop_without_mesh():
+    from repro.sharding import constrain
+
+    x = jnp.ones((4, 4))
+    assert constrain(x, ("data", None)) is x
+
+
+def test_resolve_spec_divisibility_and_alias():
+    import numpy as np
+
+    from repro.sharding import resolve_spec
+
+    # fake 4-device mesh via reshaping the single CPU device is not possible;
+    # instead exercise the pure logic through a Mesh over repeated axes sizes 1
+    mesh = jax.sharding.Mesh(np.array(jax.devices()).reshape(1, 1), ("data", "model"))
+    p = resolve_spec(mesh, (16, 32), (("pod", "data"), "model"))
+    # "pod" dropped (absent), "data"/"model" kept (divisible by 1)
+    assert p == jax.sharding.PartitionSpec("data", "model")
+
+
+def test_long500k_eligibility():
+    from repro.launch.dryrun import shape_supported
+
+    long = INPUT_SHAPES["long_500k"]
+    runs = [a for a in ("h2o-danube-1.8b", "recurrentgemma-9b", "mamba2-130m")
+            if shape_supported(get_config(a), long)[0]]
+    skips = [a for a in ("qwen1.5-4b", "glm4-9b", "grok-1-314b", "whisper-base",
+                         "qwen2-vl-72b", "internlm2-20b", "llama4-scout-17b-a16e")
+             if not shape_supported(get_config(a), long)[0]]
+    assert len(runs) == 3
+    assert len(skips) == 7
