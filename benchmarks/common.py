@@ -50,8 +50,17 @@ def run_strategy(
     rank: int | None = None,
     modalities: Tuple[str, ...] | None = None,
     task_ids: List[int] | None = None,
+    transforms=None,
+    server_opt=None,
+    sampler=None,
 ) -> Tuple[Dict, float]:
-    """Run one (backbone × strategy) cell; returns (result dict, wall seconds)."""
+    """Run one (backbone × strategy) cell; returns (result dict, wall seconds).
+
+    ``strategy`` is a registered name or a ``repro.strategies.Strategy``
+    instance; ``transforms``/``server_opt``/``sampler`` pass through to the
+    engine, so beyond-paper cells (sparsified uploads, FedAdam server, partial
+    participation) reuse this scaffolding unchanged.
+    """
     import dataclasses
 
     cfg = bench_config(BACKBONES.get(arch_key, arch_key))
@@ -85,7 +94,8 @@ def run_strategy(
                               steps=rounds * local_steps * len(train), hp=hp)
     else:
         res = run_federated(key, cfg, train, evald, strategy=strategy,
-                            rounds=rounds, hp=hp)
+                            rounds=rounds, hp=hp, transforms=transforms,
+                            server_opt=server_opt, sampler=sampler)
     dt = time.time() - t0
     out = {
         "avg_accuracy": res.avg_accuracy,

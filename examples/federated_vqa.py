@@ -17,6 +17,7 @@ import jax
 from repro.configs import get_smoke_config
 from repro.core import HyperParams, run_federated
 from repro.data import make_federated_data
+from repro.strategies import available_strategies, get_strategy
 from repro.utils import fmt_bytes
 
 
@@ -26,6 +27,9 @@ def main():
     ap.add_argument("--clients", type=int, default=5)
     ap.add_argument("--local-steps", type=int, default=6)
     ap.add_argument("--alpha", type=float, default=1.0)
+    ap.add_argument("--strategies", default="locft,fedavg,fednano",
+                    help=f"comma-separated registry names; registered: "
+                         f"{', '.join(available_strategies())}")
     ap.add_argument("--scale", choices=["tiny", "small"], default="tiny",
                     help="small ≈ 25M backbone (slower; a few hundred total steps)")
     args = ap.parse_args()
@@ -46,23 +50,25 @@ def main():
           f"(≈{total_steps} local steps/strategy), α={args.alpha}, scale={args.scale}")
 
     results = {}
-    for strategy in ("locft", "fedavg", "fednano"):
+    # resolve every name up front so a typo fails before any training time
+    for strategy in [get_strategy(n.strip()) for n in args.strategies.split(",")]:
         t0 = time.time()
         res = run_federated(jax.random.PRNGKey(0), cfg, train, evald,
                             strategy=strategy, rounds=args.rounds, hp=hp, verbose=True)
-        results[strategy] = res
-        print(f"  -> {strategy}: avg acc {100*res.avg_accuracy:.2f}% "
+        results[strategy.name] = res
+        print(f"  -> {strategy.name}: avg acc {100*res.avg_accuracy:.2f}% "
               f"({time.time()-t0:.0f}s)")
 
     print("\nper-client accuracy (%):")
-    cids = sorted(results["fednano"].client_accuracy)
+    cids = sorted(next(iter(results.values())).client_accuracy)
     print("strategy    " + "".join(f"C{c+1:<7}" for c in cids) + "avg")
     for s, res in results.items():
         cells = "".join(f"{100*res.client_accuracy[c]:<8.2f}" for c in cids)
         print(f"{s:<12}{cells}{100*res.avg_accuracy:.2f}")
 
-    ct = results["fednano"].comm_totals
-    print(f"\nFedNano communication ledger over {args.rounds} rounds × {args.clients} clients:")
+    ledger_name = "fednano" if "fednano" in results else next(reversed(results))
+    ct = results[ledger_name].comm_totals
+    print(f"\n{ledger_name} communication ledger over {args.rounds} rounds × {args.clients} clients:")
     print(f"  adapter uploads   {fmt_bytes(ct['param_up'])}")
     print(f"  diag-FIM uploads  {fmt_bytes(ct['fisher_up'])}")
     print(f"  merged broadcast  {fmt_bytes(ct['param_down'])}")

@@ -14,7 +14,8 @@ from repro.core import adapters as nano
 from repro.core.types import Batch
 from repro.data import SyntheticVQA, examples_to_batches
 from repro.models import model as backbone_lib
-from repro.optim import adamw_init, adamw_update
+from repro.optim import adamw_update
+from repro.strategies import get_strategy
 
 
 def main():
@@ -24,10 +25,13 @@ def main():
         d_ff=256, frontend_dim=64,
     )
 
-    # 1. frozen backbone (server-side) + trainable NanoEdge (client-side)
+    # 1. frozen backbone (server-side) + trainable NanoEdge (client-side);
+    #    the strategy's init_client hook builds adapters + optimizer state
     backbone = backbone_lib.init_backbone(key, cfg)
-    adapters = nano.init_nanoedge(jax.random.fold_in(key, 1), cfg)
-    opt_state = adamw_init(adapters)
+    client = get_strategy("fednano").init_client(
+        jax.random.fold_in(key, 1), cfg, cid=0, n_examples=64
+    )
+    adapters, opt_state = client.adapters, client.opt_state
 
     # 2. synthetic VQA shard
     gen = SyntheticVQA(vocab_size=cfg.vocab_size, seq_len=24,

@@ -15,6 +15,7 @@ from repro.configs import get_smoke_config
 from repro.core import adapters as nano
 from repro.data import SyntheticVQA, examples_to_batches
 from repro.models import model as backbone_lib
+from repro.strategies import get_strategy
 from repro.utils import fmt_bytes, tree_bytes
 
 
@@ -25,7 +26,10 @@ def main():
         d_ff=256, frontend_dim=64,
     )
     backbone = backbone_lib.init_backbone(key, cfg)       # SERVER
-    adapters = nano.init_nanoedge(jax.random.fold_in(key, 1), cfg)  # CLIENT
+    # CLIENT: a tuned FedNano participant (init_client = adapters + opt state)
+    adapters = get_strategy("fednano").init_client(
+        jax.random.fold_in(key, 1), cfg, cid=0, n_examples=8
+    ).adapters
 
     gen = SyntheticVQA(vocab_size=cfg.vocab_size, seq_len=24,
                        frontend_dim=cfg.frontend_dim, n_patches=8)

@@ -1,0 +1,79 @@
+"""Regenerate tests/golden/strategy_parity.json.
+
+Runs every registered strategy (plus the DP+int8 upload-path variant) on a
+tiny seeded config and records the FederatedResult metrics. The goldens were
+first captured on the PRE-plugin string-dispatch implementation, so
+tests/test_strategies.py asserting against them proves the registry path is
+numerically identical to the legacy path.
+
+    PYTHONPATH=src python scripts/gen_strategy_goldens.py
+"""
+import json
+import os
+
+import jax
+
+from repro.configs import get_smoke_config
+from repro.core import HyperParams, run_federated
+from repro.data import make_federated_data
+
+STRATEGIES = ("fednano", "fednano_ef", "fedavg", "fedprox", "feddpa_f", "locft")
+
+
+def parity_setup():
+    cfg = get_smoke_config("llava-1.5-7b").with_(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+        d_ff=128, frontend_dim=32,
+    )
+    train, evald, _ = make_federated_data(
+        cfg, n_clients=4, examples_per_client=16, alpha=1.0, batch_size=4,
+        seq_len=16,
+    )
+    return cfg, train, evald
+
+
+def run_one(cfg, train, evald, strategy, hp):
+    from repro.utils import tree_sq_norm
+
+    res = run_federated(
+        jax.random.PRNGKey(0), cfg, train, evald, strategy=strategy,
+        rounds=2, hp=hp,
+    )
+    fisher0 = res.clients[0].fisher
+    return {
+        "round_losses": [m["mean_loss"] for m in res.round_metrics],
+        "client_accuracy": {str(c): a for c, a in res.client_accuracy.items()},
+        "avg_accuracy": res.avg_accuracy,
+        "comm_totals": {k: int(v) for k, v in res.comm_totals.items()},
+        # pytree checksums: pin the actual parameter trajectories, not just
+        # the (possibly degenerate-at-toy-scale) accuracy numbers
+        "global_sq_norm": float(tree_sq_norm(res.server.global_adapters)),
+        "client0_sq_norm": float(tree_sq_norm(res.clients[0].adapters)),
+        "client0_fisher_sq_norm": (
+            float(tree_sq_norm(fisher0)) if fisher0 is not None else None
+        ),
+    }
+
+
+def main():
+    cfg, train, evald = parity_setup()
+    hp = HyperParams(lr=5e-3, local_steps=2, fisher_batches=2)
+    golden = {}
+    for s in STRATEGIES:
+        golden[s] = run_one(cfg, train, evald, s, hp)
+        print(f"  {s}: avg_acc {golden[s]['avg_accuracy']:.6f}")
+    hp_wire = HyperParams(lr=5e-3, local_steps=2, fisher_batches=2,
+                          dp_clip=1.0, dp_noise=0.01, compress_uploads=True)
+    golden["fednano+dp+int8"] = run_one(cfg, train, evald, "fednano", hp_wire)
+    print(f"  fednano+dp+int8: avg_acc {golden['fednano+dp+int8']['avg_accuracy']:.6f}")
+
+    out = os.path.join(os.path.dirname(__file__), "..", "tests", "golden",
+                       "strategy_parity.json")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(golden, f, indent=1, sort_keys=True)
+    print(f"wrote {os.path.normpath(out)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# Fast pre-commit signal: the smoke-marked test per module (<2 min) instead
+# of the full ~9-minute tier-1 suite. Usage: scripts/smoke.sh [pytest args]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -q -m smoke "$@"

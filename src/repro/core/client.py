@@ -5,15 +5,12 @@ the FedDPA-F baseline). The backbone is a frozen constant — gradients are
 taken w.r.t. the adapter pytree alone, so the server-hosted LLM weights are
 never perturbed and nothing model-sized is ever shipped.
 
-Strategy-specific behaviour:
-    fednano     adamw on adapters; dedicated Fisher pass after local training
-    fednano_ef  same, but the FIM is accumulated from training-step grads
-                (zero extra passes — paper Tab. 7 trade-off)
-    fedavg      plain local adamw
-    fedprox     + (μ/2)·‖θ − θ_global‖² proximal term in the local loss
-    feddpa_f    dual adapters: frozen personal adapter (trained in round 1
-                only) composed after the shared global adapter
-    locft       local-only; no upload, no download after round 0
+Strategy-specific behaviour is injected through the ``repro.strategies``
+hooks (``wrap_local_loss``, ``wants_fisher``, ``downloads_global``,
+``local_warmup``); this module only knows how to run T adamw steps over a
+wrapped objective and estimate the diagonal FIM. ``strategy`` arguments
+accept either a registered name ("fednano", "fedprox", …) or a ``Strategy``
+instance — names are resolved through the registry.
 """
 from __future__ import annotations
 
@@ -29,7 +26,6 @@ from repro.core import adapters as adapters_lib
 from repro.core.fisher import FisherAccumulator, fisher_pass
 from repro.core.types import Batch
 from repro.optim import adamw_init, adamw_update
-from repro.utils import tree_sq_norm, tree_sub
 
 
 @dataclass(frozen=True)
@@ -55,21 +51,15 @@ class ClientState:
     n_examples: int
     local_adapters: Optional[Dict] = None   # FedDPA-F personal adapter
     fisher: Optional[Dict] = None           # last computed diagonal FIM
-    ef_acc: Optional[FisherAccumulator] = None
-    comp_error: Optional[Dict] = None       # int8-compression error feedback
+    rounds_participated: int = 0            # local_update calls so far (drives
+                                            # download/warmup under sampling)
 
 
-def init_client(key, cfg, cid: int, n_examples: int, strategy: str) -> ClientState:
-    k1, k2 = jax.random.split(key)
-    adp = adapters_lib.init_nanoedge(k1, cfg)
-    local = adapters_lib.init_nanoedge(k2, cfg) if strategy == "feddpa_f" else None
-    return ClientState(
-        cid=cid,
-        adapters=adp,
-        opt_state=adamw_init(adp),
-        n_examples=n_examples,
-        local_adapters=local,
-    )
+def init_client(key, cfg, cid: int, n_examples: int, strategy) -> ClientState:
+    """Build a client via the strategy's ``init_client`` hook."""
+    from repro.strategies.base import get_strategy
+
+    return get_strategy(strategy).init_client(key, cfg, cid, n_examples)
 
 
 def _combined_loss(cfg, backbone, adapters, local_adapters, batch):
@@ -93,16 +83,16 @@ def _combined_loss(cfg, backbone, adapters, local_adapters, batch):
 
 
 @functools.lru_cache(maxsize=64)
-def make_train_step(cfg, strategy: str, hp: HyperParams) -> Callable:
-    """Jitted local train step, shared across clients (compiled once)."""
+def make_train_step(cfg, strategy, hp: HyperParams) -> Callable:
+    """Jitted local train step, shared across clients (compiled once per
+    (cfg, strategy, hp) — strategies are frozen dataclasses, so value-equal
+    instances hit the same cache entry)."""
 
     def step(backbone, adapters, local_adapters, opt_state, batch, global_ref, ef_sum, ef_cnt):
-        def loss_fn(adp):
-            loss, aux = _combined_loss(cfg, backbone, adp, local_adapters, batch)
-            if strategy == "fedprox":
-                loss = loss + 0.5 * hp.prox_mu * tree_sq_norm(tree_sub(adp, global_ref))
-            return loss, aux
+        def base_loss(adp):
+            return _combined_loss(cfg, backbone, adp, local_adapters, batch)
 
+        loss_fn = strategy.wrap_local_loss(base_loss, hp, global_ref)
         (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(adapters)
         new_adapters, new_opt = adamw_update(
             grads, opt_state, adapters,
@@ -155,22 +145,30 @@ def local_update(
     state: ClientState,
     batches: List[Batch],
     hp: HyperParams,
-    strategy: str,
+    strategy,
     global_adapters,
     round_idx: int,
 ) -> Tuple[ClientState, Dict]:
     """Run T local steps (+ FIM estimation) for one client. Returns metrics."""
-    # round start: adopt the global adapters (Alg. 1 ClientUpdate line 1);
-    # LocFT never re-downloads after initialization.
-    if strategy == "locft" and round_idx > 0:
-        adapters = state.adapters
-    else:
+    from repro.strategies.base import get_strategy
+
+    strategy = get_strategy(strategy)
+    # scheduling hooks see the client's own participation count, not the
+    # global round index: under partial participation a client's first
+    # round may be round r > 0, and its download/warmup schedule must
+    # start then (with full participation the two indices coincide).
+    participated = state.rounds_participated
+    # round start: adopt the global adapters (Alg. 1 ClientUpdate line 1)
+    # unless the strategy skips the download (LocFT after its first round).
+    if strategy.downloads_global(participated):
         adapters = jax.tree.map(jnp.copy, global_adapters)
+    else:
+        adapters = state.adapters
     opt_state = state.opt_state
 
-    # FedDPA-F: personal-adapter warmup rounds
+    # personal-adapter warmup rounds (FedDPA-F)
     local_adapters = state.local_adapters
-    if strategy == "feddpa_f" and round_idx < hp.dpa_warmup_rounds:
+    if local_adapters is not None and strategy.local_warmup(participated, hp):
         lstep = make_local_adapter_step(cfg, hp)
         lopt = adamw_init(local_adapters)
         for batch in batches[: hp.local_steps]:
@@ -189,14 +187,14 @@ def local_update(
         losses.append(float(loss))
 
     fisher = None
-    if strategy == "fednano":
+    if strategy.wants_fisher == "dedicated":
         gfn = make_fisher_grad(cfg)
         fisher = fisher_pass(
             lambda adp, b: gfn(backbone, adp, b),
             adapters,
             batches[: hp.fisher_batches],
         )
-    elif strategy == "fednano_ef":
+    elif strategy.wants_fisher == "streaming":
         acc = FisherAccumulator(sum_sq=ef_sum, count=ef_cnt)
         fisher = acc.finalize()
 
@@ -206,8 +204,13 @@ def local_update(
         opt_state=opt_state,
         local_adapters=local_adapters,
         fisher=fisher,
+        rounds_participated=participated + 1,
     )
-    metrics = {"loss_first": losses[0], "loss_last": losses[-1], "loss_mean": sum(losses) / len(losses)}
+    if losses:
+        metrics = {"loss_first": losses[0], "loss_last": losses[-1],
+                   "loss_mean": sum(losses) / len(losses)}
+    else:  # hp.local_steps == 0: a no-op round must stay NaN-free
+        metrics = {"loss_first": 0.0, "loss_last": 0.0, "loss_mean": 0.0}
     return new_state, metrics
 
 

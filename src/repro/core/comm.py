@@ -30,6 +30,8 @@ class RoundTraffic:
     fisher_up: int = 0       # bytes: diagonal FIM uploads (FedNano only)
     act_up: int = 0          # bytes: split activations client -> server
     act_down: int = 0        # bytes: gradient activations server -> client
+    param_up_wire: int = 0   # bytes actually on the wire after upload
+                             # transforms (== param_up when uncompressed)
 
 
 @dataclass
@@ -40,7 +42,8 @@ class CommLog:
         self.rounds.append(r)
 
     def totals(self) -> Dict[str, int]:
-        out = {"param_up": 0, "param_down": 0, "fisher_up": 0, "act_up": 0, "act_down": 0}
+        out = {"param_up": 0, "param_down": 0, "fisher_up": 0, "act_up": 0,
+               "act_down": 0, "param_up_wire": 0}
         for r in self.rounds:
             for k in out:
                 out[k] += getattr(r, k)

@@ -1,15 +1,26 @@
-"""Federated orchestration — Alg. 1 of the paper, end to end.
+"""Federated orchestration — Alg. 1 of the paper as a strategy-agnostic engine.
 
-``run_federated`` drives R communication rounds over K clients for any
-strategy in {fednano, fednano_ef, fedavg, fedprox, feddpa_f, locft}, plus a
-``centralized`` upper-bound runner. Clients execute sequentially in this
-process (one CPU); on the production mesh the server step batches all
+``run_federated`` is a thin loop over the ``repro.strategies`` hooks:
+
+    sampler.select          -> which clients run this round
+    client.local_update     -> T local steps via the strategy's loss/fisher hooks
+    strategy.post_local_update -> what each client offers for upload
+    transforms[*].apply     -> DP / quantization / sparsification on the wire
+    strategy.aggregate      -> merge (via server.server_aggregate, which logs comm)
+    server_opt.apply        -> optional FedOpt step on the merged pseudo-gradient
+    strategy.eval_params    -> which params each client evaluates at the end
+
+Methods are plugins (``repro.strategies``): the engine never branches on a
+strategy name. Strings like ``strategy="fednano"`` resolve through the
+registry, so the legacy API keeps working. Clients execute sequentially in
+this process (one CPU); on the production mesh the server step batches all
 clients' activations across the ``data``/``pod`` axes (DESIGN.md §5).
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Dict, List, Optional, Sequence, Union
 
 import jax
 
@@ -17,6 +28,15 @@ from repro.core import client as client_lib
 from repro.core import server as server_lib
 from repro.core.client import ClientState, HyperParams
 from repro.core.types import Batch
+from repro.strategies.base import Strategy, get_strategy
+from repro.strategies.sampling import ClientSampler
+from repro.strategies.server_opt import ServerOpt
+from repro.strategies.transforms import (
+    TransformCtx,
+    UpdateTransform,
+    default_transforms,
+)
+from repro.utils import tree_bytes
 
 
 @dataclass
@@ -36,89 +56,98 @@ def run_federated(
     train_data: Dict[int, List[Batch]],
     eval_data: Dict[int, List[Batch]],
     *,
-    strategy: str = "fednano",
+    strategy: Union[str, Strategy] = "fednano",
     rounds: int = 10,
     hp: HyperParams = HyperParams(),
     use_pallas: bool = False,
     server: Optional[server_lib.ServerState] = None,
     verbose: bool = False,
+    transforms: Optional[Sequence[UpdateTransform]] = None,
+    server_opt: Optional[ServerOpt] = None,
+    sampler: Optional[ClientSampler] = None,
 ) -> FederatedResult:
-    """Run R rounds of federated NanoAdapter tuning."""
+    """Run R rounds of federated NanoAdapter tuning.
+
+    ``transforms`` defaults to the ``hp``-driven chain (DP, then int8+EF);
+    ``server_opt`` defaults to the strategy's own (usually None = identity);
+    ``sampler`` defaults to full participation.
+    """
+    strat = get_strategy(strategy)
+    if transforms is None:
+        transforms = default_transforms(hp)
+    if server_opt is None:
+        server_opt = strat.server_opt()
+    if sampler is None:
+        sampler = ClientSampler()
+
     k_server, k_clients = jax.random.split(key)
     if server is None:
         server = server_lib.init_server(k_server, cfg)
     cids = sorted(train_data)
+    index_of = {cid: i for i, cid in enumerate(cids)}
     ckeys = jax.random.split(k_clients, len(cids))
     clients = [
-        client_lib.init_client(ck, cfg, cid, n_examples=len(train_data[cid]), strategy=strategy)
+        strat.init_client(ck, cfg, cid, n_examples=len(train_data[cid]))
         for ck, cid in zip(ckeys, cids)
     ]
+    tstates = {cid: [None] * len(transforms) for cid in cids}
+    opt_state = server_opt.init(server.global_adapters) if server_opt else None
 
-    result = FederatedResult(strategy=strategy)
-    wire_up_total = 0
+    result = FederatedResult(strategy=strat.name)
     for r in range(rounds):
         thetas, fishers, sizes, losses = [], [], [], []
-        for i, cid in enumerate(cids):
+        wire_up = 0
+        for cid in sampler.select(r, cids):
+            i = index_of[cid]
             clients[i], metrics = client_lib.local_update(
                 cfg,
                 server.backbone,
                 clients[i],
                 train_data[cid],
                 hp,
-                strategy,
+                strat,
                 server.global_adapters,
                 round_idx=r,
             )
-            theta = clients[i].adapters
-            # --- beyond-paper upload path: DP then int8+error-feedback ---
-            if hp.dp_clip > 0.0:
-                from repro.core.privacy import privatize_update
-
-                dpk = jax.random.fold_in(jax.random.PRNGKey(1234 + cid), r)
-                theta, _ = privatize_update(
-                    dpk, theta, server.global_adapters,
-                    clip_norm=hp.dp_clip, noise_mult=hp.dp_noise,
+            theta = strat.post_local_update(clients[i], server.global_adapters, r)
+            ctx = TransformCtx(cid=cid, round_idx=r)
+            theta_wire = None
+            for j, t in enumerate(transforms):
+                theta, tstates[cid][j], w = t.apply(
+                    ctx, theta, server.global_adapters, tstates[cid][j]
                 )
-            if hp.compress_uploads:
-                from repro.core.compression import (
-                    compress_update,
-                    init_error_feedback,
-                )
-                from repro.utils import tree_add
-
-                err = clients[i].comp_error or init_error_feedback(theta)
-                q, err, recon = compress_update(theta, server.global_adapters, err)
-                clients[i].comp_error = err
-                theta = tree_add(server.global_adapters, recon)
-                wire_up_total += q.wire_bytes
+                if w is not None:
+                    theta_wire = w
+            wire_up += theta_wire if theta_wire is not None else tree_bytes(theta)
             thetas.append(theta)
             fishers.append(clients[i].fisher)
             sizes.append(clients[i].n_examples)
             losses.append(metrics["loss_mean"])
-        if strategy != "locft":
+        if strat.aggregates and thetas:  # a custom sampler may return no cohort
+            prev_global = server.global_adapters
             server = server_lib.server_aggregate(
-                server, strategy, thetas, fishers, sizes, use_pallas=use_pallas
+                server, strat, thetas, fishers, sizes,
+                use_pallas=use_pallas, wire_up=wire_up,
             )
-        rm = {"round": r, "mean_loss": sum(losses) / len(losses)}
+            if server_opt is not None:
+                new_global, opt_state = server_opt.apply(
+                    opt_state, prev_global, server.global_adapters
+                )
+                server = dataclasses.replace(server, global_adapters=new_global)
+        rm = {"round": r, "mean_loss": sum(losses) / max(len(losses), 1),
+              "participants": len(losses)}
         result.round_metrics.append(rm)
         if verbose:
-            print(f"  [{strategy}] round {r}: mean local loss {rm['mean_loss']:.4f}")
+            print(f"  [{strat.name}] round {r}: mean local loss {rm['mean_loss']:.4f}")
 
-    # final evaluation: each client evaluates the GLOBAL adapters on its own
-    # held-out split (LocFT/FedDPA-F evaluate their personalized params).
-    for i, cid in enumerate(cids):
-        if strategy == "locft":
-            adp, ladp = clients[i].adapters, None
-        elif strategy == "feddpa_f":
-            adp, ladp = server.global_adapters, clients[i].local_adapters
-        else:
-            adp, ladp = server.global_adapters, None
+    # final evaluation: every client, on the params its strategy designates
+    # (global adapters for most; LocFT/FedDPA-F evaluate personalized params).
+    for cid in cids:
+        adp, ladp = strat.eval_params(server.global_adapters, clients[index_of[cid]])
         acc = client_lib.eval_client(cfg, server.backbone, adp, ladp, eval_data[cid])
         result.client_accuracy[cid] = acc
     result.avg_accuracy = sum(result.client_accuracy.values()) / len(cids)
     result.comm_totals = server.comm.totals()
-    if hp.compress_uploads:
-        result.comm_totals["param_up_wire"] = wire_up_total
     result.server = server
     result.clients = clients
     return result
@@ -138,8 +167,11 @@ def run_centralized(
     all_train: List[Batch] = []
     for cid in sorted(train_data):
         all_train.extend(train_data[cid])
-    server = server_lib.init_server(key, cfg)
-    state = client_lib.init_client(key, cfg, cid=0, n_examples=len(all_train), strategy="fedavg")
+    k_server, k_client = jax.random.split(key)
+    server = server_lib.init_server(k_server, cfg)
+    state = client_lib.init_client(
+        k_client, cfg, cid=0, n_examples=len(all_train), strategy="fedavg"
+    )
     hp_c = HyperParams(
         lr=hp.lr, weight_decay=hp.weight_decay, grad_clip=hp.grad_clip,
         local_steps=steps, prox_mu=hp.prox_mu, fisher_batches=hp.fisher_batches,
@@ -154,6 +186,8 @@ def run_centralized(
         acc = client_lib.eval_client(cfg, server.backbone, state.adapters, None, eval_data[cid])
         result.client_accuracy[cid] = acc
     result.avg_accuracy = sum(result.client_accuracy.values()) / len(result.client_accuracy)
+    result.server = server
+    result.clients = [state]
     if verbose:
         print(f"  [centralized] acc {result.avg_accuracy:.4f}")
     return result

@@ -13,7 +13,6 @@ from typing import Dict, List, Optional
 import jax
 
 from repro.core import adapters as adapters_lib
-from repro.core.aggregation import aggregate
 from repro.core.comm import CommLog, RoundTraffic
 from repro.models import model as model_lib
 from repro.utils import tree_bytes
@@ -37,20 +36,31 @@ def init_server(key, cfg) -> ServerState:
 
 def server_aggregate(
     server: ServerState,
-    strategy: str,
+    strategy,
     thetas: List[Dict],
     fishers: Optional[List[Dict]],
     data_sizes: List[int],
     *,
     use_pallas: bool = False,
+    wire_up: Optional[int] = None,
 ) -> ServerState:
-    """Alg. 1 line 7: θ_global <- ServerAgg({θ_k, F_k})."""
-    merged = aggregate(strategy, thetas, fishers, data_sizes, use_pallas=use_pallas)
+    """Alg. 1 line 7: θ_global <- ServerAgg({θ_k, F_k}).
+
+    ``strategy`` is a registered name or a ``Strategy`` instance; ``wire_up``
+    is the transformed upload size in bytes (defaults to the raw fp32 size).
+    """
+    from repro.strategies.base import get_strategy
+
+    merged = get_strategy(strategy).aggregate(
+        thetas, fishers, data_sizes, use_pallas=use_pallas
+    )
+    param_up = sum(tree_bytes(t) for t in thetas)
     traffic = RoundTraffic(
         round_idx=server.round_idx,
-        param_up=sum(tree_bytes(t) for t in thetas),
+        param_up=param_up,
         fisher_up=sum(tree_bytes(f) for f in fishers) if fishers and fishers[0] is not None else 0,
         param_down=tree_bytes(merged) * len(thetas) if merged is not None else 0,
+        param_up_wire=wire_up if wire_up is not None else param_up,
     )
     comm = server.comm
     comm.log_round(traffic)

@@ -21,14 +21,21 @@ from repro.checkpoint import save_server_checkpoint
 from repro.configs import get_smoke_config, list_archs
 from repro.core import HyperParams, run_centralized, run_federated
 from repro.data import make_federated_data
+from repro.strategies import UniformSampler, available_strategies
+from repro.strategies.server_opt import FedAdamOpt, FedAvgMOpt
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="llava-1.5-7b", choices=list_archs())
     ap.add_argument("--strategy", default="fednano",
-                    choices=["fednano", "fednano_ef", "fedavg", "fedprox",
-                             "feddpa_f", "locft", "centralized"])
+                    choices=list(available_strategies()) + ["centralized"])
+    ap.add_argument("--server-opt", default=None, choices=["fedavgm", "fedadam"],
+                    help="FedOpt server step applied to the merged pseudo-gradient")
+    ap.add_argument("--server-lr", type=float, default=None,
+                    help="server-optimizer learning rate (default: the opt's own)")
+    ap.add_argument("--client-frac", type=float, default=1.0,
+                    help="fraction of clients sampled per round (C in C·K)")
     ap.add_argument("--clients", type=int, default=5)
     ap.add_argument("--rounds", type=int, default=10)
     ap.add_argument("--local-steps", type=int, default=8)
@@ -67,9 +74,16 @@ def main(argv=None):
                               steps=args.rounds * args.local_steps * args.clients,
                               hp=hp, verbose=True)
     else:
+        server_opt = None
+        if args.server_opt:
+            cls = {"fedavgm": FedAvgMOpt, "fedadam": FedAdamOpt}[args.server_opt]
+            server_opt = cls(lr=args.server_lr) if args.server_lr is not None else cls()
+        sampler = UniformSampler(frac=args.client_frac, seed=args.seed) \
+            if args.client_frac < 1.0 else None
         res = run_federated(key, cfg, train, evald, strategy=args.strategy,
                             rounds=args.rounds, hp=hp, verbose=True,
-                            use_pallas=args.use_pallas)
+                            use_pallas=args.use_pallas,
+                            server_opt=server_opt, sampler=sampler)
     dt = time.time() - t0
 
     os.makedirs(args.out, exist_ok=True)

@@ -1,0 +1,70 @@
+"""Strategy-plugin API: registry-backed federated methods.
+
+A federated method = a ``Strategy`` (client objective + aggregation + eval
+choice) ⊕ a chain of ``UpdateTransform``s on the upload wire ⊕ an optional
+``ServerOpt`` ⊕ a ``ClientSampler``. The engine loop in
+``repro.core.federated`` is fixed; new methods are plugins:
+
+    from repro.strategies import Strategy, register
+
+    @register("my_method")
+    class MyMethod(Strategy):
+        def wrap_local_loss(self, loss_fn, hp, global_ref):
+            ...
+
+    run_federated(key, cfg, train, evald, strategy="my_method")
+
+See README.md "Writing a custom strategy" for a worked example.
+"""
+from repro.strategies.base import (
+    Strategy,
+    available_strategies,
+    get_strategy,
+    register,
+)
+from repro.strategies.builtin import (
+    FedAdam,
+    FedAvg,
+    FedAvgM,
+    FedDPAF,
+    FedNano,
+    FedNanoEF,
+    FedProx,
+    LocFT,
+)
+from repro.strategies.sampling import ClientSampler, UniformSampler
+from repro.strategies.server_opt import FedAdamOpt, FedAvgMOpt, ServerOpt
+from repro.strategies.transforms import (
+    ClipNoiseDP,
+    Int8EFQuant,
+    TopKSparsify,
+    TransformCtx,
+    UpdateTransform,
+    default_transforms,
+)
+
+__all__ = [
+    "Strategy",
+    "available_strategies",
+    "get_strategy",
+    "register",
+    "FedAdam",
+    "FedAvg",
+    "FedAvgM",
+    "FedDPAF",
+    "FedNano",
+    "FedNanoEF",
+    "FedProx",
+    "LocFT",
+    "ClientSampler",
+    "UniformSampler",
+    "FedAdamOpt",
+    "FedAvgMOpt",
+    "ServerOpt",
+    "ClipNoiseDP",
+    "Int8EFQuant",
+    "TopKSparsify",
+    "TransformCtx",
+    "UpdateTransform",
+    "default_transforms",
+]

@@ -1,0 +1,144 @@
+"""Strategy plugin API: the hooks a federated method implements.
+
+The engine loop in ``repro.core.federated`` is method-agnostic; everything
+that distinguishes FedNano from FedAvg from LocFT lives in a ``Strategy``
+subclass wired in through six hooks:
+
+    init_client        build the per-client state (dual adapters, opt state)
+    wrap_local_loss    modify the local objective (e.g. FedProx prox term)
+    wants_fisher       None | "dedicated" | "streaming" FIM estimation
+    post_local_update  choose what the client uploads after local steps
+    aggregate          merge client uploads into the new global adapters
+    eval_params        which (shared, personal) params a client evaluates
+
+plus three small scheduling predicates (``downloads_global``,
+``local_warmup``, ``aggregates``) and an optional ``server_opt`` factory.
+
+Strategies are **frozen dataclasses**: hashable and value-equal, so jitted
+train steps are compiled once per (cfg, strategy, hp) triple and shared
+across clients. Register with ``@register("name")``; resolve names (or pass
+instances straight through) with ``get_strategy``.
+
+NOTE: this module must not import ``repro.core`` at module scope — the
+engine imports us, so core imports here stay inside methods.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Type, Union
+
+import jax
+
+_REGISTRY: Dict[str, Type["Strategy"]] = {}
+
+
+def register(name: str) -> Callable[[Type["Strategy"]], Type["Strategy"]]:
+    """Class decorator: ``@register("fednano")`` adds the class to the
+    registry and stamps ``cls.name`` so results/logs carry the public name."""
+
+    def deco(cls: Type["Strategy"]) -> Type["Strategy"]:
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+
+    return deco
+
+
+def available_strategies() -> Tuple[str, ...]:
+    """Sorted names of every registered strategy."""
+    import repro.strategies.builtin  # noqa: F401  (ensure built-ins register)
+
+    return tuple(sorted(_REGISTRY))
+
+
+def get_strategy(spec: Union[str, "Strategy"]) -> "Strategy":
+    """Resolve a strategy name (or pass an instance through).
+
+    Unknown names raise ``ValueError`` listing the registered strategies so
+    CLI typos are self-explanatory.
+    """
+    if isinstance(spec, Strategy):
+        return spec
+    if isinstance(spec, str):
+        import repro.strategies.builtin  # noqa: F401  (ensure built-ins register)
+
+        cls = _REGISTRY.get(spec)
+        if cls is None:
+            raise ValueError(
+                f"unknown strategy {spec!r}; registered strategies: "
+                f"{', '.join(sorted(_REGISTRY))}"
+            )
+        return cls()
+    raise TypeError(f"strategy must be a name or Strategy instance, got {type(spec)}")
+
+
+@dataclass(frozen=True)
+class Strategy:
+    """Base strategy: FedAvg-shaped defaults, every hook overridable."""
+
+    name = "strategy"            # overwritten by @register
+    dual_adapters = False        # keep a personal adapter next to the shared one
+    aggregates = True            # False => server never merges (local-only)
+    wants_fisher: Optional[str] = None  # None | "dedicated" | "streaming"
+
+    # -- client lifecycle ---------------------------------------------------
+    def init_client(self, key, cfg, cid: int, n_examples: int):
+        from repro.core import adapters as adapters_lib
+        from repro.core.client import ClientState
+        from repro.optim import adamw_init
+
+        k1, k2 = jax.random.split(key)
+        adp = adapters_lib.init_nanoedge(k1, cfg)
+        local = adapters_lib.init_nanoedge(k2, cfg) if self.dual_adapters else None
+        return ClientState(
+            cid=cid,
+            adapters=adp,
+            opt_state=adamw_init(adp),
+            n_examples=n_examples,
+            local_adapters=local,
+        )
+
+    def downloads_global(self, rounds_participated: int) -> bool:
+        """Whether the client adopts θ_global at the start of this round.
+        ``rounds_participated`` counts the client's OWN prior rounds, so the
+        schedule survives partial participation (== round index when all
+        clients run every round)."""
+        return True
+
+    def local_warmup(self, rounds_participated: int, hp) -> bool:
+        """Whether this round trains the personal adapter before local steps
+        (same per-client counter as ``downloads_global``)."""
+        return False
+
+    # -- local objective ----------------------------------------------------
+    def wrap_local_loss(self, loss_fn: Callable, hp, global_ref) -> Callable:
+        """Wrap the (adapters -> (loss, aux)) objective. Called at trace time
+        inside the jitted train step; keep it pure JAX."""
+        return loss_fn
+
+    # -- upload -------------------------------------------------------------
+    def post_local_update(self, state, global_adapters, round_idx: int):
+        """What the client hands to the upload-transform pipeline."""
+        return state.adapters
+
+    # -- server -------------------------------------------------------------
+    def aggregate(
+        self,
+        thetas: List,
+        fishers: Optional[List],
+        data_sizes: Sequence[int],
+        *,
+        use_pallas: bool = False,
+    ):
+        from repro.core import aggregation
+
+        return aggregation.fedavg(thetas, data_sizes)
+
+    def server_opt(self):
+        """Optional ServerOpt applied to the merged result (None = identity)."""
+        return None
+
+    # -- evaluation ---------------------------------------------------------
+    def eval_params(self, global_adapters, client) -> Tuple[Any, Optional[Any]]:
+        """(shared adapters, personal adapters) this client evaluates with."""
+        return global_adapters, None

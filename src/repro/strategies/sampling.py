@@ -1,0 +1,38 @@
+"""Partial participation: which clients run each round.
+
+Real cross-device FL never sees every client every round; the engine asks a
+``ClientSampler`` for the round's cohort. The default (full participation)
+is the paper setting and consumes no randomness, so seeded runs without a
+sampler are bit-identical to the legacy loop. ``UniformSampler`` draws
+⌈C·K⌉ clients without replacement from its own PRNG stream (independent of
+the training keys, so changing participation never reshuffles init/DP noise).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Sequence
+
+import jax
+
+
+@dataclass(frozen=True)
+class ClientSampler:
+    """Full participation: every client, every round."""
+
+    def select(self, round_idx: int, cids: Sequence[int]) -> List[int]:
+        return list(cids)
+
+
+@dataclass(frozen=True)
+class UniformSampler(ClientSampler):
+    """Sample max(1, round(frac·K)) clients uniformly without replacement."""
+
+    frac: float = 0.5
+    seed: int = 0
+
+    def select(self, round_idx: int, cids: Sequence[int]) -> List[int]:
+        k = len(cids)
+        n = min(k, max(1, int(round(self.frac * k))))
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), round_idx)
+        idx = jax.random.choice(key, k, shape=(n,), replace=False)
+        return sorted(cids[int(i)] for i in idx)

@@ -1,0 +1,74 @@
+"""Server-side optimizers over the round pseudo-gradient (FedOpt family).
+
+After ``Strategy.aggregate`` produces the merged adapters, the engine treats
+Δ = merged − θ_global as a gradient estimate and lets a ``ServerOpt`` decide
+the actual step (Reddi et al. 2021, "Adaptive Federated Optimization"):
+
+    θ_global ← ServerOpt(θ_global, Δ)
+
+``None`` (the default) is the identity: θ_global ← merged, which is exactly
+the paper's Alg. 1 and the legacy behaviour.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import tree_sub, tree_zeros_like
+
+
+@dataclass(frozen=True)
+class ServerOpt:
+    """Identity server step (kept concrete so chains can be built uniformly)."""
+
+    def init(self, params):
+        return None
+
+    def apply(self, opt_state, global_params, merged):
+        """Returns (new global params, new opt state)."""
+        return merged, opt_state
+
+
+@dataclass(frozen=True)
+class FedAvgMOpt(ServerOpt):
+    """Server momentum: m ← β·m + Δ;  θ ← θ + lr·m (Hsu et al. 2019)."""
+
+    lr: float = 1.0
+    beta: float = 0.9
+
+    def init(self, params):
+        return tree_zeros_like(params)
+
+    def apply(self, m, global_params, merged):
+        delta = tree_sub(merged, global_params)
+        m = jax.tree.map(lambda mm, d: self.beta * mm + d, m, delta)
+        new = jax.tree.map(lambda g, mm: g + self.lr * mm, global_params, m)
+        return new, m
+
+
+@dataclass(frozen=True)
+class FedAdamOpt(ServerOpt):
+    """FedAdam: Adam moments over Δ, no bias correction (per the FedOpt
+    paper); ``eps`` doubles as the adaptivity floor τ."""
+
+    lr: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.99
+    eps: float = 1e-3
+
+    def init(self, params):
+        return {"m": tree_zeros_like(params), "v": tree_zeros_like(params)}
+
+    def apply(self, s, global_params, merged):
+        delta = tree_sub(merged, global_params)
+        m = jax.tree.map(lambda mm, d: self.b1 * mm + (1.0 - self.b1) * d,
+                         s["m"], delta)
+        v = jax.tree.map(lambda vv, d: self.b2 * vv + (1.0 - self.b2) * jnp.square(d),
+                         s["v"], delta)
+        new = jax.tree.map(
+            lambda g, mm, vv: g + self.lr * mm / (jnp.sqrt(vv) + self.eps),
+            global_params, m, v,
+        )
+        return new, {"m": m, "v": v}

@@ -1,0 +1,114 @@
+"""Composable client→server upload transforms (the wire pipeline).
+
+Any strategy can chain these on the upload path: each transform receives the
+candidate upload θ and the global reference, returns the (possibly lossy)
+θ the server will actually see, its own carried state (e.g. an error-
+feedback residual), and the bytes that would cross the wire — which the
+engine folds into ``CommLog`` as ``param_up_wire``.
+
+    theta, state, wire = transform.apply(ctx, theta, global_ref, state)
+
+``wire=None`` means "size unchanged" (e.g. clip+noise). Transforms are
+frozen dataclasses (hashable, value-equal); per-client state is threaded by
+the engine, so one transform instance serves every client.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class TransformCtx(NamedTuple):
+    """Where in the protocol the transform is running."""
+
+    cid: int
+    round_idx: int
+
+
+@dataclass(frozen=True)
+class UpdateTransform:
+    """Identity transform; subclass and override ``apply``."""
+
+    def apply(self, ctx: TransformCtx, theta, global_ref, state):
+        return theta, state, None
+
+
+@dataclass(frozen=True)
+class ClipNoiseDP(UpdateTransform):
+    """Client-level DP: L2-clip the delta to ``clip_norm``, add Gaussian
+    noise ``noise_mult·clip_norm`` (McMahan et al. 2018). Wire size unchanged."""
+
+    clip_norm: float = 1.0
+    noise_mult: float = 0.0
+
+    def apply(self, ctx, theta, global_ref, state):
+        from repro.core.privacy import privatize_update
+
+        # deterministic per-(client, round) noise stream, independent of the
+        # training PRNG so DP on/off never perturbs the learning trajectory
+        key = jax.random.fold_in(jax.random.PRNGKey(1234 + ctx.cid), ctx.round_idx)
+        theta, _ = privatize_update(
+            key, theta, global_ref,
+            clip_norm=self.clip_norm, noise_mult=self.noise_mult,
+        )
+        return theta, state, None
+
+
+@dataclass(frozen=True)
+class Int8EFQuant(UpdateTransform):
+    """int8 delta quantization with error feedback (≈4× smaller uploads);
+    the residual is carried in ``state`` and folded into the next round."""
+
+    def apply(self, ctx, theta, global_ref, state):
+        from repro.core.compression import compress_update, init_error_feedback
+        from repro.utils import tree_add
+
+        err = state if state is not None else init_error_feedback(theta)
+        q, err, recon = compress_update(theta, global_ref, err)
+        return tree_add(global_ref, recon), err, q.wire_bytes
+
+
+@dataclass(frozen=True)
+class TopKSparsify(UpdateTransform):
+    """Keep only the top ``frac`` largest-magnitude delta entries per leaf,
+    with error feedback; wire = kept values + int32 indices."""
+
+    frac: float = 0.1
+
+    def apply(self, ctx, theta, global_ref, state):
+        from repro.utils import tree_add, tree_sub
+
+        delta = tree_sub(theta, global_ref)
+        if state is not None:
+            delta = tree_add(delta, state)
+
+        wire = 0
+
+        def keep(x):
+            nonlocal wire
+            k = max(1, int(round(self.frac * x.size)))
+            wire += k * (x.dtype.itemsize + 4)
+            # index-based mask: exactly k entries survive even under ties
+            # (a threshold compare would keep extras and falsify `wire`)
+            flat = x.reshape(-1)
+            _, idx = jax.lax.top_k(jnp.abs(flat), k)
+            mask = jnp.zeros(flat.shape, bool).at[idx].set(True)
+            return jnp.where(mask, flat, jnp.zeros_like(flat)).reshape(x.shape)
+
+        sparse = jax.tree.map(keep, delta)
+        err = tree_sub(delta, sparse)
+        return tree_add(global_ref, sparse), err, wire
+
+
+def default_transforms(hp) -> Tuple[UpdateTransform, ...]:
+    """The legacy ``HyperParams``-driven chain: DP first, then int8+EF —
+    byte-for-byte what the pre-plugin engine spliced inline."""
+    chain = []
+    if hp.dp_clip > 0.0:
+        chain.append(ClipNoiseDP(clip_norm=hp.dp_clip, noise_mult=hp.dp_noise))
+    if hp.compress_uploads:
+        chain.append(Int8EFQuant())
+    return tuple(chain)

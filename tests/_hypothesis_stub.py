@@ -1,0 +1,41 @@
+"""Fallback shims for environments without ``hypothesis``.
+
+The property-based tests decorate with ``@given``/``@settings`` at module
+scope, so a missing hypothesis kills *collection* of the whole module (and,
+under ``-x``, the whole run). Importing these stand-ins instead marks just
+the property tests as skipped while the plain unit tests keep running.
+"""
+import pytest
+
+
+class _StrategyNamespace:
+    """Stands in for ``hypothesis.strategies``: any call returns None."""
+
+    def __getattr__(self, name):
+        def _strategy(*args, **kwargs):
+            return None
+
+        return _strategy
+
+
+st = _StrategyNamespace()
+
+
+def given(*args, **kwargs):
+    def deco(fn):
+        @pytest.mark.skip(reason="hypothesis not installed")
+        def _skipped():
+            pass
+
+        _skipped.__name__ = fn.__name__
+        _skipped.__doc__ = fn.__doc__
+        return _skipped
+
+    return deco
+
+
+def settings(*args, **kwargs):
+    def deco(fn):
+        return fn
+
+    return deco

@@ -9,6 +9,7 @@ from repro.core import Batch, FisherAccumulator, adapters as A, fisher as F
 from repro.utils import tree_allclose, tree_size
 
 
+@pytest.mark.smoke
 def test_adapter_identity_at_init(rng):
     """Zero-init up-projection => adapter is exact identity at round 0."""
     p = A.init_nano_adapter(rng, 32, 4)
@@ -17,6 +18,7 @@ def test_adapter_identity_at_init(rng):
     np.testing.assert_allclose(np.asarray(y), np.asarray(x), rtol=1e-6)
 
 
+@pytest.mark.smoke
 def test_adapter_scale(rng):
     p = A.init_nano_adapter(rng, 16, 4)
     p["up"] = jax.random.normal(rng, (4, 16)) * 0.1

@@ -30,6 +30,7 @@ def _batch(cfg, key, b=2, s=16):
 
 
 @pytest.mark.parametrize("arch", ALL)
+@pytest.mark.smoke
 def test_reduced_config_is_reduced(arch):
     cfg = get_smoke_config(arch)
     assert cfg.n_layers <= 3  # hybrid smoke keeps one full (rec,rec,attn) triple

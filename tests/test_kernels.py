@@ -63,6 +63,7 @@ def test_fisher_merge_kernel(k, n, dtype, rng):
     )
 
 
+@pytest.mark.smoke
 def test_fisher_merge_nd_leaf(rng):
     t = jax.random.normal(rng, (3, 16, 8))
     f = jax.random.uniform(rng, (3, 16, 8), minval=0.01)

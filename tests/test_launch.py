@@ -51,6 +51,7 @@ def test_param_shardings_cover_all_archs():
         assert jax.tree_util.tree_structure(sh) == jax.tree_util.tree_structure(backbone)
 
 
+@pytest.mark.smoke
 def test_collective_parse():
     hlo = """
   %ag = bf16[16,512]{1,0} all-gather(%x), replica_groups={}
@@ -84,6 +85,7 @@ def test_input_specs_decode_state_structure():
     assert all(hasattr(l, "shape") for l in leaves)
 
 
+@pytest.mark.smoke
 def test_exec_config_modes():
     cfg = get_smoke_config("glm4-9b")
     full = steps_lib.exec_config(cfg, SHAPES["prefill"], "full")

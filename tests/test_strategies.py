@@ -1,0 +1,268 @@
+"""Strategy-plugin API: registry, legacy parity, transforms, server opts.
+
+The parity goldens (tests/golden/strategy_parity.json) were captured on the
+PRE-plugin string-dispatch implementation; asserting the registry path
+reproduces them proves the refactor changed zero numerics.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import HyperParams, run_centralized, run_federated
+from repro.data import make_federated_data
+from repro.strategies import (
+    ClientSampler,
+    FedNano,
+    Strategy,
+    TopKSparsify,
+    UniformSampler,
+    available_strategies,
+    get_strategy,
+    register,
+)
+from repro.strategies.server_opt import FedAdamOpt, FedAvgMOpt
+from repro.utils import tree_sq_norm
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden", "strategy_parity.json")
+LEGACY = ("fednano", "fednano_ef", "fedavg", "fedprox", "feddpa_f", "locft")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    # MUST mirror scripts/gen_strategy_goldens.py exactly
+    cfg = get_smoke_config("llava-1.5-7b").with_(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+        d_ff=128, frontend_dim=32,
+    )
+    train, evald, _ = make_federated_data(
+        cfg, n_clients=4, examples_per_client=16, alpha=1.0, batch_size=4,
+        seq_len=16,
+    )
+    return cfg, train, evald
+
+
+@pytest.fixture(scope="module")
+def golden():
+    with open(GOLDEN) as f:
+        return json.load(f)
+
+
+def _run(cfg, train, evald, strategy, hp, **kw):
+    return run_federated(jax.random.PRNGKey(0), cfg, train, evald,
+                         strategy=strategy, rounds=2, hp=hp, **kw)
+
+
+def _assert_matches_golden(res, want):
+    got_losses = [m["mean_loss"] for m in res.round_metrics]
+    assert got_losses == pytest.approx(want["round_losses"], rel=1e-6)
+    assert res.avg_accuracy == pytest.approx(want["avg_accuracy"], abs=1e-9)
+    for c, a in want["client_accuracy"].items():
+        assert res.client_accuracy[int(c)] == pytest.approx(a, abs=1e-9)
+    for k, v in want["comm_totals"].items():
+        assert res.comm_totals[k] == v, (k, res.comm_totals[k], v)
+    assert float(tree_sq_norm(res.server.global_adapters)) == pytest.approx(
+        want["global_sq_norm"], rel=1e-6)
+    assert float(tree_sq_norm(res.clients[0].adapters)) == pytest.approx(
+        want["client0_sq_norm"], rel=1e-6)
+    if want["client0_fisher_sq_norm"] is not None:
+        assert float(tree_sq_norm(res.clients[0].fisher)) == pytest.approx(
+            want["client0_fisher_sq_norm"], rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+@pytest.mark.smoke
+def test_registry_lists_all_legacy_strategies():
+    names = available_strategies()
+    for s in LEGACY:
+        assert s in names
+
+
+@pytest.mark.smoke
+def test_unknown_strategy_lists_registered():
+    with pytest.raises(ValueError) as ei:
+        get_strategy("definitely_not_a_strategy")
+    msg = str(ei.value)
+    for s in LEGACY:
+        assert s in msg, f"error message should list {s}: {msg}"
+
+
+@pytest.mark.smoke
+def test_get_strategy_passthrough_and_equality():
+    s = FedNano()
+    assert get_strategy(s) is s
+    assert get_strategy("fednano") == s          # value-equal frozen dataclass
+    assert hash(get_strategy("fednano")) == hash(s)
+
+
+@pytest.mark.smoke
+def test_register_custom_strategy_roundtrip():
+    @register("_test_custom")
+    class Custom(Strategy):
+        pass
+
+    try:
+        assert isinstance(get_strategy("_test_custom"), Custom)
+        assert get_strategy("_test_custom").name == "_test_custom"
+    finally:
+        from repro.strategies.base import _REGISTRY
+
+        _REGISTRY.pop("_test_custom", None)
+
+
+# ---------------------------------------------------------------------------
+# legacy parity (seeded, 2 rounds, 4 clients)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strategy", LEGACY)
+def test_registry_matches_legacy_goldens(setup, golden, strategy):
+    cfg, train, evald = setup
+    hp = HyperParams(lr=5e-3, local_steps=2, fisher_batches=2)
+    res = _run(cfg, train, evald, strategy, hp)
+    _assert_matches_golden(res, golden[strategy])
+
+
+def test_transform_pipeline_matches_legacy_dp_int8(setup, golden):
+    """The composable DP→int8 chain reproduces the old inline blocks."""
+    cfg, train, evald = setup
+    hp = HyperParams(lr=5e-3, local_steps=2, fisher_batches=2,
+                     dp_clip=1.0, dp_noise=0.01, compress_uploads=True)
+    res = _run(cfg, train, evald, "fednano", hp)
+    _assert_matches_golden(res, golden["fednano+dp+int8"])
+
+
+def test_string_and_instance_paths_identical(setup):
+    cfg, train, evald = setup
+    hp = HyperParams(lr=5e-3, local_steps=1, fisher_batches=1)
+    a = _run(cfg, train, evald, "fednano", hp)
+    b = _run(cfg, train, evald, FedNano(), hp)
+    assert [m["mean_loss"] for m in a.round_metrics] == \
+           [m["mean_loss"] for m in b.round_metrics]
+    assert a.client_accuracy == b.client_accuracy
+
+
+# ---------------------------------------------------------------------------
+# extensibility: new methods without touching the engine
+# ---------------------------------------------------------------------------
+
+def test_fedadam_runs_end_to_end(setup):
+    cfg, train, evald = setup
+    hp = HyperParams(lr=5e-3, local_steps=1)
+    res = _run(cfg, train, evald, "fedadam", hp)
+    base = _run(cfg, train, evald, "fedavg", hp)
+    assert 0.0 <= res.avg_accuracy <= 1.0
+    # the adaptive server step must actually move the global params away
+    # from the plain-averaged trajectory
+    d = float(tree_sq_norm(jax.tree.map(
+        lambda a, b: a - b, res.server.global_adapters,
+        base.server.global_adapters)))
+    assert d > 0.0
+
+
+def test_server_opt_as_explicit_arg(setup):
+    cfg, train, evald = setup
+    hp = HyperParams(lr=5e-3, local_steps=1)
+    res = _run(cfg, train, evald, "fedavg", hp, server_opt=FedAvgMOpt(lr=0.5))
+    assert len(res.round_metrics) == 2
+    assert all(jnp.isfinite(jnp.asarray(m["mean_loss"])) for m in res.round_metrics)
+
+
+def test_topk_transform_cuts_wire_bytes(setup):
+    cfg, train, evald = setup
+    hp = HyperParams(lr=5e-3, local_steps=1)
+    res = _run(cfg, train, evald, "fedavg", hp, transforms=(TopKSparsify(frac=0.25),))
+    ct = res.comm_totals
+    assert 0 < ct["param_up_wire"] < ct["param_up"]
+    # top-k keeps 25% of entries at 8 bytes each vs 100% at 4 bytes => 50%
+    assert ct["param_up_wire"] == ct["param_up"] // 2
+
+
+def test_uniform_sampler_partial_participation(setup):
+    cfg, train, evald = setup
+    hp = HyperParams(lr=5e-3, local_steps=1)
+    res = _run(cfg, train, evald, "fedavg", hp,
+               sampler=UniformSampler(frac=0.5, seed=3))
+    assert all(m["participants"] == 2 for m in res.round_metrics)  # 0.5 * 4
+    assert len(res.client_accuracy) == 4  # everyone still evaluates
+
+
+def test_feddpa_warmup_follows_participation_not_round(setup):
+    """A client first sampled after the warmup round must still warm up its
+    personal adapter on ITS first round (warmup keys on participation)."""
+    from dataclasses import dataclass as dc
+
+    @dc(frozen=True)
+    class Staggered(ClientSampler):
+        def select(self, round_idx, cids):
+            return [0, 1] if round_idx == 0 else list(cids)
+
+    cfg, train, evald = setup
+    hp = HyperParams(lr=5e-3, local_steps=2, dpa_warmup_rounds=1)
+    res = _run(cfg, train, evald, "feddpa_f", hp, sampler=Staggered())
+    # clients 2,3 first participate at round 1 — their personal adapters
+    # must still have been trained (LoRA 'up' leaves move off zero-init)
+    for c in res.clients:
+        up_norm = float(tree_sq_norm(jax.tree.map(
+            lambda a: a, c.local_adapters["text"]["up"])))
+        assert up_norm > 0.0, f"client {c.cid} personal adapter never warmed up"
+
+
+def test_empty_cohort_round_is_skipped_gracefully(setup):
+    from dataclasses import dataclass as dc
+
+    @dc(frozen=True)
+    class EveryOther(ClientSampler):
+        def select(self, round_idx, cids):
+            return [] if round_idx == 0 else list(cids)
+
+    cfg, train, evald = setup
+    hp = HyperParams(lr=5e-3, local_steps=1)
+    res = _run(cfg, train, evald, "fedavg", hp, sampler=EveryOther())
+    assert res.round_metrics[0]["participants"] == 0
+    assert res.round_metrics[0]["mean_loss"] == 0.0
+    assert res.round_metrics[1]["participants"] == 4
+
+
+@pytest.mark.smoke
+def test_sampler_selection_shapes():
+    cids = [0, 1, 2, 3, 4]
+    assert ClientSampler().select(0, cids) == cids
+    picked = UniformSampler(frac=0.4, seed=0).select(1, cids)
+    assert len(picked) == 2 and picked == sorted(set(picked))
+    assert set(picked) <= set(cids)
+    # deterministic in (seed, round)
+    assert picked == UniformSampler(frac=0.4, seed=0).select(1, cids)
+
+
+# ---------------------------------------------------------------------------
+# satellite fixes
+# ---------------------------------------------------------------------------
+
+def test_zero_local_steps_metrics_are_finite(setup):
+    cfg, train, evald = setup
+    hp = HyperParams(lr=5e-3, local_steps=0, fisher_batches=1)
+    res = _run(cfg, train, evald, "fednano", hp)
+    for m in res.round_metrics:
+        assert m["mean_loss"] == 0.0
+
+
+def test_centralized_splits_server_and_client_keys(setup):
+    """Server init must consume a split of the key, not the raw key (the
+    synthetic single client gets the other half)."""
+    from repro.core import server as server_lib
+    from repro.utils import tree_allclose
+
+    cfg, train, evald = setup
+    res = run_centralized(jax.random.PRNGKey(0), cfg, train, evald, steps=1,
+                          hp=HyperParams(lr=5e-3))
+    k_server, _ = jax.random.split(jax.random.PRNGKey(0))
+    want = server_lib.init_server(k_server, cfg)
+    reused = server_lib.init_server(jax.random.PRNGKey(0), cfg)
+    assert tree_allclose(res.server.global_adapters, want.global_adapters)
+    assert not tree_allclose(res.server.global_adapters, reused.global_adapters)

@@ -17,6 +17,7 @@ from repro.core.comm import (
 )
 
 
+@pytest.mark.smoke
 def test_table1_upload_params_match_paper():
     cfg = get_config("llava-1.5-7b")
     up = adapter_upload_params(cfg)
@@ -72,6 +73,7 @@ def test_known_scale_param_counts():
 # sharding rules
 # ---------------------------------------------------------------------------
 
+@pytest.mark.smoke
 def test_param_specs_follow_rules():
     from repro.launch.sharding_rules import param_logical_spec
 
