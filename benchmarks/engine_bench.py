@@ -1,0 +1,153 @@
+"""Round-engine benchmark: sequential Python loop vs vmap/scan cohorts.
+
+Measures steady-state wall-clock per federated round at growing cohort
+sizes. The model is deliberately tiny (1 layer, d=32, batch 1×8 tokens):
+the engines run IDENTICAL numerics, so the only thing this sweep can
+show is orchestration cost — per-client jit dispatch in the sequential
+loop vs one stacked ``vmap`` dispatch per cohort.
+
+Timing protocol (per size × engine):
+
+  1. warmup run (``rounds=1``) — pays compilation, discarded
+  2. ``T1`` = wall of a fresh ``rounds=1`` run
+  3. ``T3`` = wall of a fresh ``rounds=3`` run
+  4. ``per_round = (T3 - T1) / 2`` — client init, round-1 host→device
+     conversion, and data setup subtract out; what remains is the
+     steady-state cost of one round.
+
+At the largest size the cohort is folded through the streaming merge
+(``agg_chunk``) for BOTH engines, bounding server memory and vmap
+compile width while keeping the comparison apples-to-apples.
+
+Usage:
+    PYTHONPATH=src python benchmarks/engine_bench.py            # full sweep
+    PYTHONPATH=src python benchmarks/engine_bench.py --quick    # ~10 s wiring check
+    PYTHONPATH=src python benchmarks/engine_bench.py --sizes 10000
+
+Full runs merge results into BENCH_engine.json at the repo root (existing
+entries for re-run sizes are replaced).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "src"))
+
+import jax
+
+from repro.configs import get_smoke_config
+from repro.core import HyperParams, run_federated
+from repro.data import make_federated_data
+
+ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+OUT = os.path.join(ROOT, "BENCH_engine.json")
+
+STRATEGY = "fednano"
+ROUNDS_SHORT, ROUNDS_LONG = 1, 3
+
+
+def bench_setup():
+    cfg = get_smoke_config("llava-1.5-7b").with_(
+        n_layers=1, d_model=32, n_heads=2, n_kv_heads=2, head_dim=16,
+        d_ff=64, frontend_dim=16,
+    )
+    train1, _, _ = make_federated_data(
+        cfg, n_clients=1, examples_per_client=2, alpha=1.0, batch_size=1,
+        seq_len=8, seed=0,
+    )
+    hp = HyperParams(lr=5e-3, local_steps=2, fisher_batches=1)
+    return cfg, train1[0], hp
+
+
+def _wall(cfg, shared_batches, hp, *, clients, engine, rounds, agg_chunk):
+    # every client references the SAME batch list object: the engine's
+    # shared-data fast path broadcasts it instead of stacking K copies
+    train = {cid: shared_batches for cid in range(clients)}
+    evald = {cid: shared_batches for cid in range(clients)}
+    t0 = time.time()
+    run_federated(jax.random.PRNGKey(0), cfg, train, evald, strategy=STRATEGY,
+                  rounds=rounds, hp=hp, engine=engine, agg_chunk=agg_chunk,
+                  final_eval=False)
+    return time.time() - t0
+
+
+def bench_size(cfg, shared, hp, clients, *, agg_chunk=None):
+    row = {"clients": clients, "strategy": STRATEGY, "agg_chunk": agg_chunk}
+    for engine in ("sequential", "vmap"):
+        kw = dict(clients=clients, engine=engine, agg_chunk=agg_chunk)
+        _wall(cfg, shared, hp, rounds=ROUNDS_SHORT, **kw)  # compile warmup
+        t1 = _wall(cfg, shared, hp, rounds=ROUNDS_SHORT, **kw)
+        t3 = _wall(cfg, shared, hp, rounds=ROUNDS_LONG, **kw)
+        per_round = (t3 - t1) / (ROUNDS_LONG - ROUNDS_SHORT)
+        row[f"{engine}_t1_s"] = round(t1, 4)
+        row[f"{engine}_t3_s"] = round(t3, 4)
+        row[f"{engine}_per_round_s"] = round(per_round, 4)
+    row["speedup"] = round(
+        row["sequential_per_round_s"] / max(row["vmap_per_round_s"], 1e-9), 2)
+    print(f"  K={clients:>6}  seq/round={row['sequential_per_round_s']:8.3f}s  "
+          f"vmap/round={row['vmap_per_round_s']:8.3f}s  "
+          f"speedup={row['speedup']:.2f}x"
+          + (f"  (agg_chunk={agg_chunk})" if agg_chunk else ""))
+    return row
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--sizes", default=None,
+                    help="comma-separated cohort sizes (default 10,100,1000,10000)")
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny sizes, no JSON written — wiring check for smoke runs")
+    ap.add_argument("--out", default=None,
+                    help=f"output JSON (default {OUT}; --quick skips writing)")
+    args = ap.parse_args(argv)
+
+    if args.sizes:
+        sizes = [int(s) for s in args.sizes.split(",")]
+    elif args.quick:
+        sizes = [4, 8]
+    else:
+        sizes = [10, 100, 1000, 10000]
+
+    cfg, shared, hp = bench_setup()
+    print(f"### engine bench: {STRATEGY}, local_steps={hp.local_steps}, "
+          f"per_round = (T(rounds={ROUNDS_LONG}) - T(rounds={ROUNDS_SHORT}))/"
+          f"{ROUNDS_LONG - ROUNDS_SHORT}")
+    rows = []
+    for k in sizes:
+        # at huge cohorts, stream-fold chunks: O(chunk) server memory and a
+        # bounded vmap compile width, identically for both engines
+        chunk = 1000 if k > 1000 else None
+        rows.append(bench_size(cfg, shared, hp, k, agg_chunk=chunk))
+
+    out_path = args.out or (None if args.quick else OUT)
+    if out_path:
+        doc = {"config": {
+            "arch": "llava-1.5-7b (reduced: 1 layer, d_model=32, d_ff=64)",
+            "strategy": STRATEGY, "local_steps": hp.local_steps,
+            "fisher_batches": hp.fisher_batches, "batch_size": 1, "seq_len": 8,
+            "timing": f"per_round = (T(rounds={ROUNDS_LONG}) - "
+                      f"T(rounds={ROUNDS_SHORT}))/{ROUNDS_LONG - ROUNDS_SHORT}, "
+                      "fresh seeded run each, after a compile warmup run",
+        }, "results": []}
+        if os.path.exists(out_path):
+            try:
+                with open(out_path) as f:
+                    doc["results"] = json.load(f).get("results", [])
+            except (json.JSONDecodeError, OSError):
+                pass
+        done = {r["clients"] for r in rows}
+        doc["results"] = sorted(
+            [r for r in doc["results"] if r["clients"] not in done] + rows,
+            key=lambda r: r["clients"])
+        with open(out_path, "w") as f:
+            json.dump(doc, f, indent=1)
+        print(f"wrote {out_path}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,8 @@
+#!/usr/bin/env bash
+# Wiring check for the round-engine benchmark: tiny cohorts, no JSON output.
+# Part of scripts/smoke.sh; run the full sweep with
+#   PYTHONPATH=src python benchmarks/engine_bench.py
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python benchmarks/engine_bench.py --quick "$@"

@@ -4,4 +4,5 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-exec python -m pytest -q -m smoke "$@"
+python -m pytest -q -m smoke "$@"
+scripts/bench_quick.sh

@@ -11,21 +11,31 @@ hooks (``wrap_local_loss``, ``wants_fisher``, ``downloads_global``,
 wrapped objective and estimate the diagonal FIM. ``strategy`` arguments
 accept either a registered name ("fednano", "fedprox", …) or a ``Strategy``
 instance — names are resolved through the registry.
+
+Two execution paths share the same step bodies (one source of numerics):
+
+  * ``local_update``       — one client, Python loop over T jitted steps.
+  * ``local_update_many``  — a cohort of homogeneous clients at once:
+    per-client state pytrees are stacked along a new leading axis and the
+    whole round runs as ``vmap`` (over clients) of ``lax.scan`` (over local
+    steps), so a 1k-client round costs one dispatch instead of 1k·T.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import adapters as adapters_lib
 from repro.core.fisher import FisherAccumulator, fisher_pass
 from repro.core.types import Batch
 from repro.optim import adamw_init, adamw_update
+from repro.utils import tree_stack  # noqa: F401  (re-export for tests)
 
 
 @dataclass(frozen=True)
@@ -53,6 +63,8 @@ class ClientState:
     fisher: Optional[Dict] = None           # last computed diagonal FIM
     rounds_participated: int = 0            # local_update calls so far (drives
                                             # download/warmup under sampling)
+    local_opt_state: Any = None             # personal-adapter AdamW moments,
+                                            # carried across warmup rounds
 
 
 def init_client(key, cfg, cid: int, n_examples: int, strategy) -> ClientState:
@@ -82,6 +94,51 @@ def _combined_loss(cfg, backbone, adapters, local_adapters, batch):
     return loss, aux
 
 
+def _train_step_body(cfg, strategy, hp, backbone, adapters, local_adapters,
+                     opt_state, batch, global_ref, ef_sum, ef_cnt):
+    """One local AdamW step on the shared adapters (pure; traced by both the
+    per-client jitted step and the vmap/scan engine — single numerics source)."""
+
+    def base_loss(adp):
+        return _combined_loss(cfg, backbone, adp, local_adapters, batch)
+
+    loss_fn = strategy.wrap_local_loss(base_loss, hp, global_ref)
+    (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(adapters)
+    new_adapters, new_opt = adamw_update(
+        grads, opt_state, adapters,
+        lr=hp.lr, weight_decay=hp.weight_decay, grad_clip=hp.grad_clip,
+    )
+    # streaming (EF) Fisher accumulation — free squared grads
+    new_ef_sum = jax.tree.map(
+        lambda s, g: s + jnp.square(g.astype(s.dtype)), ef_sum, grads
+    )
+    return new_adapters, new_opt, loss, new_ef_sum, ef_cnt + 1.0
+
+
+def _fisher_grad_body(cfg, backbone, adapters, batch):
+    """grad of the plain task loss (no prox) — used by the dedicated FIM pass."""
+
+    def loss_fn(adp):
+        loss, _ = adapters_lib.fednano_loss(cfg, backbone, adp, batch)
+        return loss
+
+    return jax.grad(loss_fn)(adapters)
+
+
+def _local_adapter_step_body(cfg, hp, backbone, adapters, local_adapters, opt_state, batch):
+    """FedDPA-F warmup step: train the PERSONAL adapter (shared adapter frozen)."""
+
+    def loss_fn(ladp):
+        loss, _ = _combined_loss(cfg, backbone, adapters, ladp, batch)
+        return loss
+
+    loss, grads = jax.value_and_grad(loss_fn)(local_adapters)
+    new_local, new_opt = adamw_update(
+        grads, opt_state, local_adapters, lr=hp.lr, grad_clip=hp.grad_clip
+    )
+    return new_local, new_opt, loss
+
+
 @functools.lru_cache(maxsize=64)
 def make_train_step(cfg, strategy, hp: HyperParams) -> Callable:
     """Jitted local train step, shared across clients (compiled once per
@@ -89,52 +146,26 @@ def make_train_step(cfg, strategy, hp: HyperParams) -> Callable:
     instances hit the same cache entry)."""
 
     def step(backbone, adapters, local_adapters, opt_state, batch, global_ref, ef_sum, ef_cnt):
-        def base_loss(adp):
-            return _combined_loss(cfg, backbone, adp, local_adapters, batch)
-
-        loss_fn = strategy.wrap_local_loss(base_loss, hp, global_ref)
-        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(adapters)
-        new_adapters, new_opt = adamw_update(
-            grads, opt_state, adapters,
-            lr=hp.lr, weight_decay=hp.weight_decay, grad_clip=hp.grad_clip,
-        )
-        # streaming (EF) Fisher accumulation — free squared grads
-        new_ef_sum = jax.tree.map(
-            lambda s, g: s + jnp.square(g.astype(s.dtype)), ef_sum, grads
-        )
-        return new_adapters, new_opt, loss, new_ef_sum, ef_cnt + 1.0
+        return _train_step_body(cfg, strategy, hp, backbone, adapters,
+                                local_adapters, opt_state, batch, global_ref,
+                                ef_sum, ef_cnt)
 
     return jax.jit(step)
 
 
 @functools.lru_cache(maxsize=64)
 def make_fisher_grad(cfg) -> Callable:
-    """grad of the plain task loss (no prox) — used by the dedicated FIM pass."""
-
     def gfn(backbone, adapters, batch):
-        def loss_fn(adp):
-            loss, _ = adapters_lib.fednano_loss(cfg, backbone, adp, batch)
-            return loss
-
-        return jax.grad(loss_fn)(adapters)
+        return _fisher_grad_body(cfg, backbone, adapters, batch)
 
     return jax.jit(gfn)
 
 
 @functools.lru_cache(maxsize=64)
 def make_local_adapter_step(cfg, hp: HyperParams) -> Callable:
-    """FedDPA-F warmup: train the PERSONAL adapter (shared adapter frozen)."""
-
     def step(backbone, adapters, local_adapters, opt_state, batch):
-        def loss_fn(ladp):
-            loss, _ = _combined_loss(cfg, backbone, adapters, ladp, batch)
-            return loss
-
-        loss, grads = jax.value_and_grad(loss_fn)(local_adapters)
-        new_local, new_opt = adamw_update(
-            grads, opt_state, local_adapters, lr=hp.lr, grad_clip=hp.grad_clip
-        )
-        return new_local, new_opt, loss
+        return _local_adapter_step_body(cfg, hp, backbone, adapters,
+                                        local_adapters, opt_state, batch)
 
     return jax.jit(step)
 
@@ -166,13 +197,19 @@ def local_update(
         adapters = state.adapters
     opt_state = state.opt_state
 
-    # personal-adapter warmup rounds (FedDPA-F)
+    # personal-adapter warmup rounds (FedDPA-F). The optimizer state is
+    # carried in ClientState across rounds — re-initializing it every warmup
+    # round would silently discard the Adam moments between rounds.
     local_adapters = state.local_adapters
+    local_opt_state = state.local_opt_state
     if local_adapters is not None and strategy.local_warmup(participated, hp):
         lstep = make_local_adapter_step(cfg, hp)
-        lopt = adamw_init(local_adapters)
+        if local_opt_state is None:
+            local_opt_state = adamw_init(local_adapters)
         for batch in batches[: hp.local_steps]:
-            local_adapters, lopt, _ = lstep(backbone, adapters, local_adapters, lopt, batch)
+            local_adapters, local_opt_state, _ = lstep(
+                backbone, adapters, local_adapters, local_opt_state, batch
+            )
 
     step_fn = make_train_step(cfg, strategy, hp)
     ef_sum = jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), adapters)
@@ -203,6 +240,7 @@ def local_update(
         adapters=adapters,
         opt_state=opt_state,
         local_adapters=local_adapters,
+        local_opt_state=local_opt_state,
         fisher=fisher,
         rounds_participated=participated + 1,
     )
@@ -212,6 +250,241 @@ def local_update(
     else:  # hp.local_steps == 0: a no-op round must stay NaN-free
         metrics = {"loss_first": 0.0, "loss_last": 0.0, "loss_mean": 0.0}
     return new_state, metrics
+
+
+# ---------------------------------------------------------------------------
+# vectorized many-client path (engine="vmap")
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=64)
+def make_many_update(cfg, strategy, hp: HyperParams, *, downloads: bool,
+                     warmup: bool, has_local: bool, train_t: int, warm_t: int,
+                     fish_t: int, shared_batches: bool) -> Callable:
+    """Jitted whole-round update for a stacked cohort.
+
+    One compiled program runs ``vmap`` over the client axis of ``lax.scan``
+    over local steps, reusing the exact per-client step bodies of the
+    sequential path. Static knobs (download/warmup flags, step counts,
+    whether every client trains on the same batches) are part of the cache
+    key; array shapes carry the cohort size K.
+
+    Batch pytrees arrive client-major: leaves ``(K, T, B, ...)``, or
+    ``(T, B, ...)`` when ``shared_batches`` (then broadcast via in_axes=None
+    instead of materializing K copies).
+    """
+
+    def one_client(backbone, global_adapters, adapters, opt_state, local,
+                   lopt, train_b, warm_b, fish_b):
+        if downloads:
+            adapters = global_adapters  # vmap broadcast == per-client copy
+        if warmup:
+            def wstep(carry, batch):
+                la, lo = carry
+                la, lo, wloss = _local_adapter_step_body(
+                    cfg, hp, backbone, adapters, la, lo, batch)
+                return (la, lo), wloss
+
+            (local, lopt), _ = jax.lax.scan(wstep, (local, lopt), warm_b)
+
+        ef_sum = jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), adapters)
+        ef_cnt = jnp.zeros((), jnp.float32)
+        if train_t > 0:
+            def tstep(carry, batch):
+                adp, opt, es, ec = carry
+                adp, opt, loss, es, ec = _train_step_body(
+                    cfg, strategy, hp, backbone, adp, local, opt, batch,
+                    global_adapters, es, ec)
+                return (adp, opt, es, ec), loss
+
+            (adapters, opt_state, ef_sum, ef_cnt), losses = jax.lax.scan(
+                tstep, (adapters, opt_state, ef_sum, ef_cnt), train_b)
+        else:
+            losses = jnp.zeros((0,), jnp.float32)
+
+        fisher = None
+        if strategy.wants_fisher == "dedicated" and fish_t == 0:
+            # fisher_pass over zero batches: the eps floor, nothing else
+            fisher = jax.tree.map(lambda x: jnp.full_like(x, 1e-8), adapters)
+        elif strategy.wants_fisher == "dedicated":
+            def fstep(acc, batch):
+                s, c = acc
+                g = _fisher_grad_body(cfg, backbone, adapters, batch)
+                s = jax.tree.map(
+                    lambda ss, gg: ss + jnp.square(gg.astype(ss.dtype)), s, g)
+                return (s, c + 1.0), None
+
+            f0 = (jax.tree.map(jnp.zeros_like, adapters),
+                  jnp.zeros((), jnp.float32))
+            (fsum, fcnt), _ = jax.lax.scan(fstep, f0, fish_b)
+            c = jnp.maximum(fcnt, 1.0)
+            fisher = jax.tree.map(lambda s: s / c + 1e-8, fsum)
+        elif strategy.wants_fisher == "streaming":
+            c = jnp.maximum(ef_cnt, 1.0)
+            fisher = jax.tree.map(lambda s: s / c + 1e-8, ef_sum)
+        return adapters, opt_state, local, lopt, fisher, losses
+
+    batch_ax = None if shared_batches else 0
+    vm = jax.vmap(one_client,
+                  in_axes=(None, None, 0, 0, 0, 0, batch_ax, batch_ax, batch_ax))
+    return jax.jit(vm)
+
+
+def _host_stack(trees):
+    """``tree_stack`` for the host side of the vmap path.
+
+    ``jnp.stack`` over K device arrays and per-leaf device ops cost
+    O(K·leaves) dispatches — at 10k clients that dwarfs the round itself. On
+    the CPU backend ``np.asarray`` of a jax array is a zero-copy view, so
+    stacking through numpy is one C-level memcpy + one transfer per leaf.
+    """
+    td = jax.tree.structure(trees[0])
+    # one batched device_get (single sync) beats per-leaf np.asarray, which
+    # pays ~100µs of sync overhead per call — O(K·leaves) of them here
+    flat = jax.device_get([jax.tree.flatten(t)[0] for t in trees])
+    leaves = [jnp.asarray(np.stack(col)) for col in zip(*flat)]
+    return jax.tree.unflatten(td, leaves)
+
+
+def _host_unstack(tree, n: int):
+    """Inverse of :func:`_host_stack`: numpy views per client, no device ops.
+
+    The returned per-client leaves are numpy arrays (views into the stacked
+    result); downstream jax ops convert them back for free on CPU.
+    """
+    leaves, td = jax.tree.flatten(tree)
+    host = jax.device_get(leaves)
+    return [jax.tree.unflatten(td, [h[i] for h in host]) for i in range(n)]
+
+
+def _stack_batch_rows(batch_lists: Sequence[List[Batch]], picks, *, shared: bool):
+    """Stack per-client batch selections into scan xs.
+
+    ``picks(batches)`` yields the Batch sequence one client scans over.
+    Returns leaves ``(T, B, ...)`` when ``shared`` (every client trains on
+    the same list object — broadcast instead of K copies), else
+    ``(K, T, B, ...)``.
+    """
+    if shared:
+        row = list(picks(batch_lists[0]))
+        return _host_stack(row) if row else None
+    rows = []
+    for bl in batch_lists:
+        row = list(picks(bl))
+        if not row:
+            return None
+        rows.append(_host_stack(row))
+    return _host_stack(rows)
+
+
+def local_update_many(
+    cfg,
+    backbone,
+    states: List[ClientState],
+    batch_lists: Sequence[List[Batch]],
+    hp: HyperParams,
+    strategy,
+    global_adapters,
+) -> Tuple[List[ClientState], List[Dict]]:
+    """Vectorized ``local_update`` over a homogeneous cohort.
+
+    All clients must share the same scheduling flags this round (the engine
+    groups cohorts by ``downloads_global``/``local_warmup``), the same batch
+    shapes, and the same warmup/Fisher batch counts; heterogeneous cohorts
+    raise ``ValueError`` (fall back to ``engine="sequential"``).
+    """
+    from repro.strategies.base import get_strategy
+
+    strategy = get_strategy(strategy)
+    k = len(states)
+    assert k > 0
+
+    participated = [s.rounds_participated for s in states]
+    downloads = strategy.downloads_global(participated[0])
+    has_local = states[0].local_adapters is not None
+    warmup = has_local and strategy.local_warmup(participated[0], hp)
+    for s, p in zip(states[1:], participated[1:]):
+        if (strategy.downloads_global(p) != downloads
+                or (s.local_adapters is not None) != has_local
+                or ((s.local_adapters is not None)
+                    and strategy.local_warmup(p, hp)) != warmup):
+            raise ValueError(
+                "local_update_many needs a cohort with uniform download/"
+                "warmup schedules; group clients by these flags first")
+
+    warm_ts = {min(len(bl), hp.local_steps) for bl in batch_lists} if warmup else {0}
+    fish_ts = ({min(len(bl), hp.fisher_batches) for bl in batch_lists}
+               if strategy.wants_fisher == "dedicated" else {0})
+    if len(warm_ts) > 1 or len(fish_ts) > 1:
+        raise ValueError(
+            "local_update_many needs uniform per-client batch counts for the "
+            "warmup/Fisher passes; use engine='sequential' for ragged shards")
+    warm_t, fish_t = warm_ts.pop(), fish_ts.pop()
+    train_t = hp.local_steps
+
+    shared = all(bl is batch_lists[0] for bl in batch_lists)
+    try:
+        train_xs = _stack_batch_rows(
+            batch_lists, lambda bl: (bl[t % len(bl)] for t in range(train_t)),
+            shared=shared)
+        warm_xs = _stack_batch_rows(
+            batch_lists, lambda bl: bl[:warm_t], shared=shared) if warmup else None
+        fish_xs = _stack_batch_rows(
+            batch_lists, lambda bl: bl[:fish_t], shared=shared) if fish_t else None
+    except ValueError as e:  # jnp.stack shape mismatch
+        raise ValueError(
+            "local_update_many needs identical batch shapes across the "
+            f"cohort ({e}); use engine='sequential' for ragged shards") from e
+    if train_t > 0 and train_xs is None:
+        raise ValueError("clients with no training batches cannot run local steps")
+
+    adapters0 = (None if downloads
+                 else _host_stack([s.adapters for s in states]))
+    opt0 = _host_stack([s.opt_state for s in states])
+    local0 = (_host_stack([s.local_adapters for s in states])
+              if has_local else None)
+    lopt0 = None
+    if warmup:
+        lopt0 = _host_stack([
+            s.local_opt_state if s.local_opt_state is not None
+            else adamw_init(s.local_adapters) for s in states
+        ])
+
+    fn = make_many_update(
+        cfg, strategy, hp, downloads=downloads, warmup=warmup,
+        has_local=has_local, train_t=train_t, warm_t=warm_t, fish_t=fish_t,
+        shared_batches=shared)
+    new_adp, new_opt, new_local, new_lopt, fishers, losses = fn(
+        backbone, global_adapters, adapters0, opt0, local0, lopt0,
+        train_xs, warm_xs, fish_xs)
+
+    adp_list = _host_unstack(new_adp, k)
+    opt_list = _host_unstack(new_opt, k)
+    local_list = _host_unstack(new_local, k) if has_local else [None] * k
+    lopt_list = _host_unstack(new_lopt, k) if warmup else [None] * k
+    fisher_list = (_host_unstack(fishers, k)
+                   if strategy.wants_fisher is not None else [None] * k)
+
+    losses_np = np.asarray(losses) if train_t > 0 else np.zeros((k, 0), np.float32)
+    new_states, metrics = [], []
+    for i, s in enumerate(states):
+        new_states.append(dataclasses.replace(
+            s,
+            adapters=adp_list[i],
+            opt_state=opt_list[i],
+            local_adapters=local_list[i] if has_local else s.local_adapters,
+            local_opt_state=lopt_list[i] if warmup else s.local_opt_state,
+            fisher=fisher_list[i],
+            rounds_participated=s.rounds_participated + 1,
+        ))
+        # identical arithmetic to the sequential path: python floats, summed
+        # in step order, so seeded metrics match bit-for-bit
+        ls = [float(x) for x in losses_np[i]]
+        if ls:
+            metrics.append({"loss_first": ls[0], "loss_last": ls[-1],
+                            "loss_mean": sum(ls) / len(ls)})
+        else:
+            metrics.append({"loss_first": 0.0, "loss_last": 0.0, "loss_mean": 0.0})
+    return new_states, metrics
 
 
 @functools.lru_cache(maxsize=64)

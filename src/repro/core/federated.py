@@ -12,21 +12,39 @@
 
 Methods are plugins (``repro.strategies``): the engine never branches on a
 strategy name. Strings like ``strategy="fednano"`` resolve through the
-registry, so the legacy API keeps working. Clients execute sequentially in
-this process (one CPU); on the production mesh the server step batches all
-clients' activations across the ``data``/``pod`` axes (DESIGN.md §5).
+registry, so the legacy API keeps working.
+
+Three execution engines share those hooks:
+
+  * ``engine="sequential"`` — one client at a time, a Python loop of jitted
+    steps. Reference semantics; handles ragged per-client data.
+  * ``engine="vmap"`` — the round's cohort is grouped by scheduling flags,
+    per-client state pytrees are stacked, and each group runs as ``vmap``
+    (clients) of ``lax.scan`` (local steps): one dispatch per group instead
+    of K·T. Seeded metrics match the sequential engine (pinned against
+    ``tests/golden/strategy_parity.json``). With ``agg_chunk=c`` the cohort
+    is processed in chunks of ``c`` and folded into a running merge through
+    the strategy's ``agg_stream_*`` hooks, so server memory is O(c) in the
+    cohort size.
+  * ``engine="buffered"`` — FedBuff-style async simulation: clients run
+    against the global version they last downloaded, a completion-ordered
+    event loop fills a server buffer, and every ``buffer_size`` arrivals are
+    merged with staleness-discounted weights n_k/(1+τ)^p. Stragglers delay
+    only their own upload, never the round.
 """
 from __future__ import annotations
 
 import dataclasses
+import heapq
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Union
+from typing import Callable, Dict, List, Optional, Sequence, Union
 
 import jax
 
 from repro.core import client as client_lib
 from repro.core import server as server_lib
 from repro.core.client import ClientState, HyperParams
+from repro.core.comm import RoundTraffic
 from repro.core.types import Batch
 from repro.strategies.base import Strategy, get_strategy
 from repro.strategies.sampling import ClientSampler
@@ -38,6 +56,8 @@ from repro.strategies.transforms import (
 )
 from repro.utils import tree_bytes
 
+ENGINES = ("sequential", "vmap", "buffered")
+
 
 @dataclass
 class FederatedResult:
@@ -48,6 +68,7 @@ class FederatedResult:
     comm_totals: Dict[str, int] = field(default_factory=dict)
     server: Optional[object] = None
     clients: Optional[List[ClientState]] = None
+    engine: str = "sequential"
 
 
 def run_federated(
@@ -65,13 +86,28 @@ def run_federated(
     transforms: Optional[Sequence[UpdateTransform]] = None,
     server_opt: Optional[ServerOpt] = None,
     sampler: Optional[ClientSampler] = None,
+    engine: str = "sequential",
+    agg_chunk: Optional[int] = None,
+    buffer_size: Optional[int] = None,
+    staleness_power: float = 0.5,
+    latency_fn: Optional[Callable[[int, int], int]] = None,
+    final_eval: bool = True,
 ) -> FederatedResult:
     """Run R rounds of federated NanoAdapter tuning.
 
     ``transforms`` defaults to the ``hp``-driven chain (DP, then int8+EF);
     ``server_opt`` defaults to the strategy's own (usually None = identity);
-    ``sampler`` defaults to full participation.
+    ``sampler`` defaults to full participation. ``engine`` picks the
+    execution path (see module docstring); ``agg_chunk`` bounds server-side
+    aggregation memory by folding cohort chunks through the strategy's
+    streaming-merge hooks. ``buffer_size`` / ``staleness_power`` /
+    ``latency_fn(cid, version) -> int`` configure the buffered async engine
+    (``rounds`` then counts server merges, not synchronized rounds).
+    ``final_eval=False`` skips the end-of-run accuracy pass (benchmarks
+    timing 10k-client rounds don't want 10k eval dispatches).
     """
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r}; choose from {ENGINES}")
     strat = get_strategy(strategy)
     if transforms is None:
         transforms = default_transforms(hp)
@@ -91,25 +127,66 @@ def run_federated(
         for ck, cid in zip(ckeys, cids)
     ]
     tstates = {cid: [None] * len(transforms) for cid in cids}
-    opt_state = server_opt.init(server.global_adapters) if server_opt else None
 
-    result = FederatedResult(strategy=strat.name)
+    if engine == "buffered":
+        result, server = _run_buffered(
+            cfg, server, strat, clients, cids, index_of, train_data, hp,
+            transforms, tstates, server_opt, rounds=rounds,
+            buffer_size=buffer_size, staleness_power=staleness_power,
+            latency_fn=latency_fn, use_pallas=use_pallas, verbose=verbose,
+        )
+    else:
+        result, server = _run_sync(
+            cfg, server, strat, clients, cids, index_of, train_data, hp,
+            transforms, tstates, server_opt, sampler, rounds=rounds,
+            engine=engine, agg_chunk=agg_chunk, use_pallas=use_pallas,
+            verbose=verbose,
+        )
+
+    # final evaluation: every client, on the params its strategy designates
+    # (global adapters for most; LocFT/FedDPA-F evaluate personalized params).
+    if final_eval:
+        for cid in cids:
+            adp, ladp = strat.eval_params(server.global_adapters, clients[index_of[cid]])
+            acc = client_lib.eval_client(cfg, server.backbone, adp, ladp, eval_data[cid])
+            result.client_accuracy[cid] = acc
+        result.avg_accuracy = (
+            sum(result.client_accuracy.values()) / max(len(cids), 1)
+        )
+    result.comm_totals = server.comm.totals()
+    result.server = server
+    result.clients = clients
+    return result
+
+
+def _chunks(seq: List, width: int):
+    for i in range(0, len(seq), width):
+        yield seq[i : i + width]
+
+
+def _run_sync(
+    cfg, server, strat, clients, cids, index_of, train_data, hp,
+    transforms, tstates, server_opt, sampler, *, rounds, engine, agg_chunk,
+    use_pallas, verbose,
+):
+    """Synchronized rounds: ``engine`` is "sequential" or "vmap"."""
+    streaming = bool(agg_chunk) and strat.aggregates
+    opt_state = server_opt.init(server.global_adapters) if server_opt else None
+    result = FederatedResult(strategy=strat.name, engine=engine)
+
     for r in range(rounds):
-        thetas, fishers, sizes, losses = [], [], [], []
+        cohort = list(sampler.select(r, cids))
+        gbytes = tree_bytes(server.global_adapters)
+        down_bytes = 0
         wire_up = 0
-        for cid in sampler.select(r, cids):
-            i = index_of[cid]
-            clients[i], metrics = client_lib.local_update(
-                cfg,
-                server.backbone,
-                clients[i],
-                train_data[cid],
-                hp,
-                strat,
-                server.global_adapters,
-                round_idx=r,
-            )
-            theta = strat.post_local_update(clients[i], server.global_adapters, r)
+        losses: List[float] = []           # cohort order
+        updates: List[tuple] = []          # (theta, fisher, size), cohort order
+        stream_acc = strat.agg_stream_init() if streaming else None
+        stream_buf: List[tuple] = []
+        stream_bytes = {"param_up": 0, "fisher_up": 0}
+        folded_any = False
+
+        def apply_transforms(cid: int, theta):
             ctx = TransformCtx(cid=cid, round_idx=r)
             theta_wire = None
             for j, t in enumerate(transforms):
@@ -118,39 +195,239 @@ def run_federated(
                 )
                 if w is not None:
                     theta_wire = w
-            wire_up += theta_wire if theta_wire is not None else tree_bytes(theta)
-            thetas.append(theta)
-            fishers.append(clients[i].fisher)
-            sizes.append(clients[i].n_examples)
-            losses.append(metrics["loss_mean"])
-        if strat.aggregates and thetas:  # a custom sampler may return no cohort
+            return theta, (theta_wire if theta_wire is not None else tree_bytes(theta))
+
+        def offer(cid: int, state: ClientState, loss_mean: float):
+            nonlocal wire_up, folded_any
+            theta = strat.post_local_update(state, server.global_adapters, r)
+            theta, wbytes = apply_transforms(cid, theta)
+            wire_up += wbytes
+            losses.append(loss_mean)
+            if streaming:
+                stream_buf.append((theta, state.fisher, state.n_examples))
+                if len(stream_buf) >= agg_chunk:
+                    fold_stream()
+            else:
+                updates.append((theta, state.fisher, state.n_examples))
+
+        def fold_stream():
+            nonlocal stream_acc, folded_any
+            if not stream_buf:
+                return
+            ts = [u[0] for u in stream_buf]
+            fs = [u[1] for u in stream_buf]
+            ws = [u[2] for u in stream_buf]
+            stream_bytes["param_up"] += sum(tree_bytes(t) for t in ts)
+            stream_bytes["fisher_up"] += sum(
+                tree_bytes(f) for f in fs if f is not None)
+            stream_acc = strat.agg_stream_fold(
+                stream_acc, ts, fs, ws, use_pallas=use_pallas)
+            folded_any = True
+            stream_buf.clear()
+
+        if engine == "sequential":
+            for cid in cohort:
+                i = index_of[cid]
+                if strat.downloads_global(clients[i].rounds_participated):
+                    down_bytes += gbytes
+                clients[i], metrics = client_lib.local_update(
+                    cfg, server.backbone, clients[i], train_data[cid], hp,
+                    strat, server.global_adapters, round_idx=r,
+                )
+                offer(cid, clients[i], metrics["loss_mean"])
+        else:  # engine == "vmap": group cohort by scheduling flags, then batch
+            groups: Dict[tuple, List[int]] = {}
+            for cid in cohort:
+                st = clients[index_of[cid]]
+                p = st.rounds_participated
+                flags = (
+                    strat.downloads_global(p),
+                    st.local_adapters is not None and strat.local_warmup(p, hp),
+                )
+                groups.setdefault(flags, []).append(cid)
+            # non-streaming aggregation must see cohort order; buffer per-cid
+            pending: Dict[int, tuple] = {}
+            for (downloads, _), gcids in groups.items():
+                width = agg_chunk if agg_chunk else len(gcids)
+                for chunk in _chunks(gcids, width):
+                    idxs = [index_of[c] for c in chunk]
+                    new_states, mets = client_lib.local_update_many(
+                        cfg, server.backbone, [clients[i] for i in idxs],
+                        [train_data[c] for c in chunk], hp, strat,
+                        server.global_adapters,
+                    )
+                    if downloads:
+                        down_bytes += gbytes * len(chunk)
+                    for c, i, ns, m in zip(chunk, idxs, new_states, mets):
+                        clients[i] = ns
+                        pending[c] = m["loss_mean"]
+                        offer(c, ns, m["loss_mean"])
+            # keep round metrics in cohort order regardless of grouping
+            losses = [pending[c] for c in cohort if c in pending]
+
+        if strat.aggregates and (updates or stream_buf or folded_any):
             prev_global = server.global_adapters
-            server = server_lib.server_aggregate(
-                server, strat, thetas, fishers, sizes,
-                use_pallas=use_pallas, wire_up=wire_up,
-            )
+            if streaming:
+                fold_stream()
+                merged = strat.agg_stream_finalize(stream_acc, use_pallas=use_pallas)
+                server = server_lib.server_commit(
+                    server, merged,
+                    param_up=stream_bytes["param_up"],
+                    fisher_up=stream_bytes["fisher_up"],
+                    param_down=down_bytes, wire_up=wire_up,
+                )
+            else:
+                thetas = [u[0] for u in updates]
+                fishers = [u[1] for u in updates]
+                sizes = [u[2] for u in updates]
+                server = server_lib.server_aggregate(
+                    server, strat, thetas, fishers, sizes,
+                    use_pallas=use_pallas, wire_up=wire_up,
+                    down_bytes=down_bytes,
+                )
             if server_opt is not None:
                 new_global, opt_state = server_opt.apply(
                     opt_state, prev_global, server.global_adapters
                 )
                 server = dataclasses.replace(server, global_adapters=new_global)
-        rm = {"round": r, "mean_loss": sum(losses) / max(len(losses), 1),
-              "participants": len(losses)}
+        elif down_bytes:
+            # no merge this round (e.g. LocFT) but clients still pulled the
+            # global at round start — that broadcast crossed the wire
+            server_lib.log_downloads(server, r, down_bytes)
+
+        n = len(losses)
+        # an empty cohort must be distinguishable from a perfect round:
+        # participants==0 carries mean_loss=None, never a fake 0.0
+        rm = {"round": r,
+              "mean_loss": (sum(losses) / n) if n else None,
+              "participants": n}
         result.round_metrics.append(rm)
         if verbose:
-            print(f"  [{strat.name}] round {r}: mean local loss {rm['mean_loss']:.4f}")
+            shown = "skipped (no participants)" if n == 0 else f"mean local loss {rm['mean_loss']:.4f}"
+            print(f"  [{strat.name}] round {r}: {shown}")
 
-    # final evaluation: every client, on the params its strategy designates
-    # (global adapters for most; LocFT/FedDPA-F evaluate personalized params).
+    return result, server
+
+
+def _run_buffered(
+    cfg, server, strat, clients, cids, index_of, train_data, hp,
+    transforms, tstates, server_opt, *, rounds, buffer_size, staleness_power,
+    latency_fn, use_pallas, verbose,
+):
+    """FedBuff-style async engine: merge every ``buffer_size`` completions.
+
+    Simulated time advances in integer server ticks; ``latency_fn(cid,
+    version)`` says how many ticks a client's local run takes (default 1 —
+    homogeneous clients degenerate to synchronized rounds). A client always
+    trains against the global *version it last downloaded*; its upload is
+    merged with weight n_k/(1+τ)^p where τ is the number of server merges
+    that happened while it was running. ``rounds`` counts server merges.
+    """
+    if not strat.aggregates:
+        raise ValueError(
+            f"engine='buffered' needs an aggregating strategy; {strat.name!r} "
+            "never merges (local-only)")
+    bsize = buffer_size if buffer_size else max(1, len(cids) // 2)
+    bsize = min(bsize, len(cids))
+    if latency_fn is None:
+        latency_fn = lambda cid, version: 1  # noqa: E731
+    opt_state = server_opt.init(server.global_adapters) if server_opt else None
+    result = FederatedResult(strategy=strat.name, engine="buffered")
+    gbytes = tree_bytes(server.global_adapters)
+
+    # version -> [global snapshot, in-flight refcount]; clients in flight pin
+    # the snapshot they downloaded, so memory is O(distinct live versions)
+    version = 0
+    snapshots: Dict[int, list] = {version: [server.global_adapters, 0]}
+    events: List[tuple] = []  # (finish_tick, cid, version_started)
+    merges = 0
+    acc_up = {"param_up": 0, "fisher_up": 0, "wire_up": 0, "down": 0}
+    buffer: List[tuple] = []  # (theta, fisher, size, loss_mean, staleness)
+
+    def dispatch(cid: int, now: int):
+        st = clients[index_of[cid]]
+        if strat.downloads_global(st.rounds_participated):
+            acc_up["down"] += gbytes
+        snapshots[version][1] += 1
+        lat = max(1, int(latency_fn(cid, version)))
+        heapq.heappush(events, (now + lat, cid, version))
+
     for cid in cids:
-        adp, ladp = strat.eval_params(server.global_adapters, clients[index_of[cid]])
-        acc = client_lib.eval_client(cfg, server.backbone, adp, ladp, eval_data[cid])
-        result.client_accuracy[cid] = acc
-    result.avg_accuracy = sum(result.client_accuracy.values()) / len(cids)
-    result.comm_totals = server.comm.totals()
-    result.server = server
-    result.clients = clients
-    return result
+        dispatch(cid, 0)
+
+    while merges < rounds:
+        # drain every completion in this simulated tick before re-dispatching
+        # any of them: a client re-downloads only after its upload is acked,
+        # by which point the server has folded everything this tick produced
+        # (so uniform latency degenerates to synchronized zero-staleness
+        # rounds instead of racing re-downloads against the merge)
+        now = events[0][0]
+        done_this_tick: List[int] = []
+        while events and events[0][0] == now and merges < rounds:
+            _, cid, v_start = heapq.heappop(events)
+            done_this_tick.append(cid)
+            snap_global, _ = snapshots[v_start]
+            i = index_of[cid]
+            clients[i], metrics = client_lib.local_update(
+                cfg, server.backbone, clients[i], train_data[cid], hp, strat,
+                snap_global, round_idx=merges,
+            )
+            theta = strat.post_local_update(clients[i], snap_global, merges)
+            ctx = TransformCtx(cid=cid, round_idx=merges)
+            theta_wire = None
+            for j, t in enumerate(transforms):
+                theta, tstates[cid][j], w = t.apply(ctx, theta, snap_global,
+                                                    tstates[cid][j])
+                if w is not None:
+                    theta_wire = w
+            acc_up["wire_up"] += theta_wire if theta_wire is not None else tree_bytes(theta)
+            acc_up["param_up"] += tree_bytes(theta)
+            if clients[i].fisher is not None:
+                acc_up["fisher_up"] += tree_bytes(clients[i].fisher)
+            buffer.append((theta, clients[i].fisher, clients[i].n_examples,
+                           metrics["loss_mean"], version - v_start))
+            snapshots[v_start][1] -= 1
+            if snapshots[v_start][1] == 0 and v_start != version:
+                del snapshots[v_start]
+
+            if len(buffer) >= bsize:
+                weights = [n / (1.0 + tau) ** staleness_power
+                           for _, _, n, _, tau in buffer]
+                sacc = strat.agg_stream_init()
+                sacc = strat.agg_stream_fold(
+                    sacc, [b[0] for b in buffer], [b[1] for b in buffer], weights,
+                    use_pallas=use_pallas)
+                merged = strat.agg_stream_finalize(sacc, use_pallas=use_pallas)
+                prev_global = server.global_adapters
+                server = server_lib.server_commit(
+                    server, merged,
+                    param_up=acc_up["param_up"], fisher_up=acc_up["fisher_up"],
+                    param_down=acc_up["down"], wire_up=acc_up["wire_up"],
+                )
+                if server_opt is not None:
+                    new_global, opt_state = server_opt.apply(
+                        opt_state, prev_global, server.global_adapters)
+                    server = dataclasses.replace(server, global_adapters=new_global)
+                blosses = [b[3] for b in buffer]
+                bstale = [b[4] for b in buffer]
+                rm = {"round": merges,
+                      "mean_loss": sum(blosses) / len(blosses),
+                      "participants": len(buffer),
+                      "mean_staleness": sum(bstale) / len(bstale)}
+                result.round_metrics.append(rm)
+                if verbose:
+                    print(f"  [{strat.name}] merge {merges}: mean loss "
+                          f"{rm['mean_loss']:.4f} staleness {rm['mean_staleness']:.2f}")
+                merges += 1
+                version += 1
+                snapshots[version] = [server.global_adapters, 0]
+                buffer.clear()
+                acc_up = {"param_up": 0, "fisher_up": 0, "wire_up": 0, "down": 0}
+
+        for cid in done_this_tick:
+            dispatch(cid, now)
+
+    return result, server
 
 
 def run_centralized(
@@ -181,11 +458,23 @@ def run_centralized(
         server.global_adapters, round_idx=0,
     )
     result = FederatedResult(strategy="centralized")
-    result.round_metrics.append({"round": 0, "mean_loss": metrics["loss_mean"]})
+    result.round_metrics.append(
+        {"round": 0, "mean_loss": metrics["loss_mean"], "participants": 1}
+    )
+    # the centralized upper bound still moves bytes: one initial broadcast
+    # down to the lone trainer, one adapter upload back — log it so comm
+    # tables comparing against this bound don't silently read zeros
+    server.comm.log_round(RoundTraffic(
+        round_idx=0,
+        param_up=tree_bytes(state.adapters),
+        param_down=tree_bytes(server.global_adapters),
+        param_up_wire=tree_bytes(state.adapters),
+    ))
     for cid in sorted(eval_data):
         acc = client_lib.eval_client(cfg, server.backbone, state.adapters, None, eval_data[cid])
         result.client_accuracy[cid] = acc
     result.avg_accuracy = sum(result.client_accuracy.values()) / len(result.client_accuracy)
+    result.comm_totals = server.comm.totals()
     result.server = server
     result.clients = [state]
     if verbose:

@@ -36,6 +36,16 @@ def main(argv=None):
                     help="server-optimizer learning rate (default: the opt's own)")
     ap.add_argument("--client-frac", type=float, default=1.0,
                     help="fraction of clients sampled per round (C in C·K)")
+    ap.add_argument("--engine", default="sequential",
+                    choices=["sequential", "vmap", "buffered"],
+                    help="round engine: per-client loop, vectorized vmap/scan "
+                         "cohort, or FedBuff-style buffered async")
+    ap.add_argument("--agg-chunk", type=int, default=None,
+                    help="fold cohort chunks of this size into a streaming "
+                         "merge (O(chunk) server memory; vmap engine)")
+    ap.add_argument("--buffer-size", type=int, default=None,
+                    help="server buffer size for --engine buffered "
+                         "(default: half the population)")
     ap.add_argument("--clients", type=int, default=5)
     ap.add_argument("--rounds", type=int, default=10)
     ap.add_argument("--local-steps", type=int, default=8)
@@ -83,7 +93,9 @@ def main(argv=None):
         res = run_federated(key, cfg, train, evald, strategy=args.strategy,
                             rounds=args.rounds, hp=hp, verbose=True,
                             use_pallas=args.use_pallas,
-                            server_opt=server_opt, sampler=sampler)
+                            server_opt=server_opt, sampler=sampler,
+                            engine=args.engine, agg_chunk=args.agg_chunk,
+                            buffer_size=args.buffer_size)
     dt = time.time() - t0
 
     os.makedirs(args.out, exist_ok=True)

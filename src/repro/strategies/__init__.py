@@ -32,8 +32,8 @@ from repro.strategies.builtin import (
     FedProx,
     LocFT,
 )
-from repro.strategies.sampling import ClientSampler, UniformSampler
-from repro.strategies.server_opt import FedAdamOpt, FedAvgMOpt, ServerOpt
+from repro.strategies.sampling import ClientSampler, FixedSizeSampler, UniformSampler
+from repro.strategies.server_opt import FedAdamOpt, FedAvgMOpt, FedBuffOpt, ServerOpt
 from repro.strategies.transforms import (
     ClipNoiseDP,
     Int8EFQuant,
@@ -57,9 +57,11 @@ __all__ = [
     "FedProx",
     "LocFT",
     "ClientSampler",
+    "FixedSizeSampler",
     "UniformSampler",
     "FedAdamOpt",
     "FedAvgMOpt",
+    "FedBuffOpt",
     "ServerOpt",
     "ClipNoiseDP",
     "Int8EFQuant",

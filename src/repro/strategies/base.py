@@ -12,7 +12,10 @@ subclass wired in through six hooks:
     eval_params        which (shared, personal) params a client evaluates
 
 plus three small scheduling predicates (``downloads_global``,
-``local_warmup``, ``aggregates``) and an optional ``server_opt`` factory.
+``local_warmup``, ``aggregates``), an optional ``server_opt`` factory, and
+the streaming-aggregation triple (``agg_stream_init`` / ``agg_stream_fold``
+/ ``agg_stream_finalize``) the chunked/buffered engines fold uploads through
+so server memory stays O(chunk) rather than O(cohort).
 
 Strategies are **frozen dataclasses**: hashable and value-equal, so jitted
 train steps are compiled once per (cfg, strategy, hp) triple and shared
@@ -133,6 +136,44 @@ class Strategy:
         from repro.core import aggregation
 
         return aggregation.fedavg(thetas, data_sizes)
+
+    # -- streaming aggregation ----------------------------------------------
+    # The O(chunk)-memory counterpart of ``aggregate``: the engine folds
+    # cohort chunks (and the buffered async mode folds staleness-weighted
+    # uploads) into a running accumulator, so the server never materializes
+    # all K client trees at once. The base implementation is the running
+    # weighted average (== fedavg up to summation order); Fisher-merging
+    # strategies override all three with a numerator/denominator pair.
+
+    def agg_stream_init(self):
+        """Fresh accumulator (None = lazily shaped on the first fold)."""
+        return None
+
+    def agg_stream_fold(self, acc, thetas: List, fishers: Optional[List],
+                        weights: Sequence[float], *, use_pallas: bool = False):
+        """Fold one chunk of client uploads into the accumulator.
+
+        ``weights`` are unnormalized (data sizes, possibly staleness-scaled);
+        normalization happens once in ``agg_stream_finalize``.
+        """
+        from repro.utils import tree_add, tree_weighted_sum
+
+        num = tree_weighted_sum(thetas, weights)
+        w = float(sum(weights))
+        if acc is None:
+            like = jax.tree.map(lambda x: x.dtype, thetas[0])
+            return {"num": num, "w": w, "like": like}
+        return {"num": tree_add(acc["num"], num), "w": acc["w"] + w,
+                "like": acc["like"]}
+
+    def agg_stream_finalize(self, acc, *, use_pallas: bool = False):
+        """Normalize the accumulator into the merged adapters (or None if
+        nothing was folded)."""
+        if acc is None:
+            return None
+        inv = 1.0 / max(acc["w"], 1e-12)
+        return jax.tree.map(lambda n, d: (n * inv).astype(d),
+                            acc["num"], acc["like"])
 
     def server_opt(self):
         """Optional ServerOpt applied to the merged result (None = identity)."""

@@ -10,6 +10,9 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import List, Optional, Sequence
 
+import jax
+import jax.numpy as jnp
+
 from repro.strategies.base import Strategy, register
 
 
@@ -48,6 +51,38 @@ class FedNano(Strategy):
         return aggregation.fisher_merge(
             thetas, fishers, data_sizes, use_pallas=use_pallas
         )
+
+    # streaming Fisher merge: fold Σ wFθ / Σ wF pairs chunk by chunk;
+    # finalize reproduces Eq. 1 with the eps floor scaled by the total
+    # weight (num/(den+eps·W) == (num/W)/((den/W)+eps), the batch formula).
+    def agg_stream_fold(self, acc, thetas, fishers, weights, *, use_pallas=False):
+        from repro.utils import tree_add, tree_stack
+
+        if fishers is None or any(f is None for f in fishers):
+            raise ValueError("fednano streaming merge needs a FIM per upload")
+        w = jnp.asarray(weights, jnp.float32)
+        ts, fs = tree_stack(thetas), tree_stack(fishers)
+        num = jax.tree.map(
+            lambda t, f: jnp.tensordot(
+                w, f.astype(jnp.float32) * t.astype(jnp.float32), axes=1),
+            ts, fs)
+        den = jax.tree.map(
+            lambda f: jnp.tensordot(w, f.astype(jnp.float32), axes=1), fs)
+        wsum = float(jnp.sum(w))
+        if acc is None:
+            like = jax.tree.map(lambda x: x.dtype, thetas[0])
+            return {"num": num, "den": den, "w": wsum, "like": like}
+        return {"num": tree_add(acc["num"], num),
+                "den": tree_add(acc["den"], den),
+                "w": acc["w"] + wsum, "like": acc["like"]}
+
+    def agg_stream_finalize(self, acc, *, use_pallas=False, eps: float = 1e-8):
+        if acc is None:
+            return None
+        floor = eps * acc["w"]
+        return jax.tree.map(
+            lambda n, d, t: (n / (d + floor)).astype(t),
+            acc["num"], acc["den"], acc["like"])
 
 
 @register("fednano_ef")

@@ -36,3 +36,22 @@ class UniformSampler(ClientSampler):
         key = jax.random.fold_in(jax.random.PRNGKey(self.seed), round_idx)
         idx = jax.random.choice(key, k, shape=(n,), replace=False)
         return sorted(cids[int(i)] for i in idx)
+
+
+@dataclass(frozen=True)
+class FixedSizeSampler(ClientSampler):
+    """Draw a cohort of exactly ``n`` clients per round (cross-device FL
+    convention, and what the engine benchmark sweeps: cohort size is the
+    knob, population size the backdrop)."""
+
+    n: int = 1
+    seed: int = 0
+
+    def select(self, round_idx: int, cids: Sequence[int]) -> List[int]:
+        k = len(cids)
+        n = min(max(1, self.n), k)
+        if n == k:
+            return list(cids)
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), round_idx)
+        idx = jax.random.choice(key, k, shape=(n,), replace=False)
+        return sorted(cids[int(i)] for i in idx)

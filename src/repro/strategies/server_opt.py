@@ -32,6 +32,19 @@ class ServerOpt:
 
 
 @dataclass(frozen=True)
+class FedBuffOpt(ServerOpt):
+    """Damped server step for buffered async aggregation (FedBuff, Nguyen
+    et al. 2022): θ ← θ + lr·Δ. Identity at lr=1; lr<1 tempers merges built
+    from stale buffered uploads."""
+
+    lr: float = 1.0
+
+    def apply(self, s, global_params, merged):
+        new = jax.tree.map(lambda g, m: g + self.lr * (m - g), global_params, merged)
+        return new, s
+
+
+@dataclass(frozen=True)
 class FedAvgMOpt(ServerOpt):
     """Server momentum: m ← β·m + Δ;  θ ← θ + lr·m (Hsu et al. 2019)."""
 

@@ -52,13 +52,35 @@ def tree_sq_norm(tree):
 
 
 def tree_stack(trees):
-    """Stack a list of identically-structured pytrees along a new axis 0."""
-    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+    """Stack a list of identically-structured pytrees along a new axis 0.
+
+    Host-resident leaves (numpy, as produced by the vmap engine's unstack)
+    take a C-level ``np.stack`` + one transfer instead of a K-operand device
+    op — at 10k clients the difference is the aggregation's wall-clock.
+    Tracers and device arrays fall through to ``jnp.stack`` unchanged.
+    """
+
+    def _stack(*xs):
+        if all(type(x) is np.ndarray for x in xs):
+            return jnp.asarray(np.stack(xs, axis=0))
+        return jnp.stack(xs, axis=0)
+
+    return jax.tree.map(_stack, *trees)
 
 
 def tree_unstack(tree, n: int):
     """Inverse of :func:`tree_stack` — returns a list of ``n`` pytrees."""
     return [jax.tree.map(lambda x, i=i: x[i], tree) for i in range(n)]
+
+
+def tree_weighted_sum(trees, weights):
+    """Σ_k w_k · tree_k, accumulated in float32 (streaming-merge building
+    block: callers fold fixed-size chunks so memory stays O(chunk))."""
+    w = jnp.asarray(weights, jnp.float32)
+    stacked = tree_stack(trees)
+    return jax.tree.map(
+        lambda s: jnp.tensordot(w, s.astype(jnp.float32), axes=1), stacked
+    )
 
 
 def tree_cast(tree, dtype):

@@ -1,0 +1,279 @@
+"""Round engines: vmap/scan parity, streaming merge, buffered async, and the
+round-accounting / warmup-state regression fixes.
+
+The vectorized engine must be a pure performance play: against the same
+goldens as the sequential path (tests/golden/strategy_parity.json), with the
+same tolerances. Everything observable — losses, accuracies, comm byte
+counts, final adapter norms — is pinned.
+"""
+import json
+import os
+from dataclasses import dataclass as dc
+
+import jax
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import HyperParams, run_centralized, run_federated
+from repro.core import server as server_lib
+from repro.data import make_federated_data
+from repro.strategies import ClientSampler, FixedSizeSampler, UniformSampler
+from repro.strategies.server_opt import FedBuffOpt
+from repro.utils import tree_bytes, tree_sq_norm
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden", "strategy_parity.json")
+LEGACY = ("fednano", "fednano_ef", "fedavg", "fedprox", "feddpa_f", "locft")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    # MUST mirror scripts/gen_strategy_goldens.py exactly
+    cfg = get_smoke_config("llava-1.5-7b").with_(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+        d_ff=128, frontend_dim=32,
+    )
+    train, evald, _ = make_federated_data(
+        cfg, n_clients=4, examples_per_client=16, alpha=1.0, batch_size=4,
+        seq_len=16,
+    )
+    return cfg, train, evald
+
+
+@pytest.fixture(scope="module")
+def golden():
+    with open(GOLDEN) as f:
+        return json.load(f)
+
+
+def _run(cfg, train, evald, strategy, hp, **kw):
+    return run_federated(jax.random.PRNGKey(0), cfg, train, evald,
+                         strategy=strategy, rounds=2, hp=hp, **kw)
+
+
+def _assert_matches_golden(res, want):
+    got_losses = [m["mean_loss"] for m in res.round_metrics]
+    assert got_losses == pytest.approx(want["round_losses"], rel=1e-6)
+    assert res.avg_accuracy == pytest.approx(want["avg_accuracy"], abs=1e-9)
+    for c, a in want["client_accuracy"].items():
+        assert res.client_accuracy[int(c)] == pytest.approx(a, abs=1e-9)
+    for k, v in want["comm_totals"].items():
+        assert res.comm_totals[k] == v, (k, res.comm_totals[k], v)
+    assert float(tree_sq_norm(res.server.global_adapters)) == pytest.approx(
+        want["global_sq_norm"], rel=1e-6)
+    assert float(tree_sq_norm(res.clients[0].adapters)) == pytest.approx(
+        want["client0_sq_norm"], rel=1e-6)
+    if want["client0_fisher_sq_norm"] is not None:
+        assert float(tree_sq_norm(res.clients[0].fisher)) == pytest.approx(
+            want["client0_fisher_sq_norm"], rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# vmap engine: golden parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strategy", LEGACY)
+def test_vmap_engine_matches_goldens(setup, golden, strategy):
+    cfg, train, evald = setup
+    hp = HyperParams(lr=5e-3, local_steps=2, fisher_batches=2)
+    res = _run(cfg, train, evald, strategy, hp, engine="vmap")
+    assert res.engine == "vmap"
+    _assert_matches_golden(res, golden[strategy])
+
+
+def test_vmap_matches_sequential_under_sampling(setup):
+    cfg, train, evald = setup
+    hp = HyperParams(lr=5e-3, local_steps=2)
+    sampler = UniformSampler(frac=0.5, seed=3)
+    a = _run(cfg, train, evald, "fedavg", hp, sampler=sampler, engine="sequential")
+    b = _run(cfg, train, evald, "fedavg", hp, sampler=sampler, engine="vmap")
+    assert [m["participants"] for m in a.round_metrics] == \
+           [m["participants"] for m in b.round_metrics]
+    la = [m["mean_loss"] for m in a.round_metrics]
+    lb = [m["mean_loss"] for m in b.round_metrics]
+    assert la == pytest.approx(lb, rel=1e-6)
+    assert a.comm_totals == b.comm_totals
+    assert float(tree_sq_norm(a.server.global_adapters)) == pytest.approx(
+        float(tree_sq_norm(b.server.global_adapters)), rel=1e-6)
+
+
+@pytest.mark.smoke
+def test_vmap_engine_smoke():
+    cfg = get_smoke_config("llava-1.5-7b").with_(
+        n_layers=1, d_model=32, n_heads=2, n_kv_heads=2, head_dim=16,
+        d_ff=64, frontend_dim=16,
+    )
+    train, evald, _ = make_federated_data(
+        cfg, n_clients=2, examples_per_client=4, alpha=1.0, batch_size=2,
+        seq_len=8,
+    )
+    hp = HyperParams(lr=5e-3, local_steps=1, fisher_batches=1)
+    res = run_federated(jax.random.PRNGKey(0), cfg, train, evald,
+                        strategy="fednano", rounds=1, hp=hp, engine="vmap")
+    assert res.round_metrics[0]["participants"] == 2
+    assert res.round_metrics[0]["mean_loss"] is not None
+    assert res.comm_totals["param_up"] > 0
+
+
+def test_unknown_engine_rejected(setup):
+    cfg, train, evald = setup
+    with pytest.raises(ValueError, match="unknown engine"):
+        run_federated(jax.random.PRNGKey(0), cfg, train, evald,
+                      strategy="fedavg", rounds=1, engine="pmap")
+
+
+# ---------------------------------------------------------------------------
+# streaming (chunked) aggregation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strategy", ["fednano", "fedavg"])
+def test_streaming_merge_matches_full_merge(setup, strategy):
+    cfg, train, evald = setup
+    hp = HyperParams(lr=5e-3, local_steps=2, fisher_batches=2)
+    full = _run(cfg, train, evald, strategy, hp, engine="vmap")
+    chunked = _run(cfg, train, evald, strategy, hp, engine="vmap", agg_chunk=2)
+    # summation order differs chunk-to-chunk, so tolerance not bit-exactness
+    la = [m["mean_loss"] for m in full.round_metrics]
+    lb = [m["mean_loss"] for m in chunked.round_metrics]
+    assert la == pytest.approx(lb, rel=1e-5)
+    assert float(tree_sq_norm(full.server.global_adapters)) == pytest.approx(
+        float(tree_sq_norm(chunked.server.global_adapters)), rel=1e-5)
+    # chunked folding must not change what crossed the wire
+    assert full.comm_totals == chunked.comm_totals
+
+
+def test_streaming_odd_chunk_covers_remainder(setup):
+    cfg, train, evald = setup
+    hp = HyperParams(lr=5e-3, local_steps=1)
+    full = _run(cfg, train, evald, "fedavg", hp, engine="vmap")
+    # 4 clients in chunks of 3 -> a full chunk plus a remainder fold
+    chunked = _run(cfg, train, evald, "fedavg", hp, engine="vmap", agg_chunk=3)
+    assert chunked.comm_totals["param_up"] == full.comm_totals["param_up"]
+    assert float(tree_sq_norm(full.server.global_adapters)) == pytest.approx(
+        float(tree_sq_norm(chunked.server.global_adapters)), rel=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# buffered async engine (FedBuff-style)
+# ---------------------------------------------------------------------------
+
+def test_buffered_uniform_latency_degenerates_to_rounds(setup):
+    cfg, train, evald = setup
+    hp = HyperParams(lr=5e-3, local_steps=1)
+    res = run_federated(jax.random.PRNGKey(0), cfg, train, evald,
+                        strategy="fedavg", rounds=2, hp=hp, engine="buffered",
+                        buffer_size=4)
+    assert res.engine == "buffered"
+    assert len(res.round_metrics) == 2
+    for m in res.round_metrics:
+        assert m["participants"] == 4
+        # all four clients started on the same version => zero staleness
+        assert m["mean_staleness"] == 0.0
+
+
+def test_buffered_straggler_has_staleness(setup):
+    cfg, train, evald = setup
+    hp = HyperParams(lr=5e-3, local_steps=1)
+    res = run_federated(
+        jax.random.PRNGKey(0), cfg, train, evald, strategy="fedavg",
+        rounds=3, hp=hp, engine="buffered", buffer_size=2,
+        latency_fn=lambda cid, v: 5 if cid == 0 else 1,
+        server_opt=FedBuffOpt(lr=0.5),
+    )
+    assert len(res.round_metrics) == 3
+    assert all(m["participants"] == 2 for m in res.round_metrics)
+    # once merges outpace the straggler, some upload must arrive stale
+    assert any(m["mean_staleness"] > 0 for m in res.round_metrics)
+
+
+def test_buffered_rejects_non_aggregating_strategy(setup):
+    cfg, train, evald = setup
+    with pytest.raises(ValueError, match="buffered"):
+        run_federated(jax.random.PRNGKey(0), cfg, train, evald,
+                      strategy="locft", rounds=1, engine="buffered")
+
+
+# ---------------------------------------------------------------------------
+# regression: round accounting + warmup state (the bugfixes)
+# ---------------------------------------------------------------------------
+
+def test_centralized_populates_comm_totals(setup):
+    cfg, train, evald = setup
+    res = run_centralized(jax.random.PRNGKey(0), cfg, train, evald, steps=2,
+                          hp=HyperParams(lr=5e-3))
+    adapter_bytes = tree_bytes(res.clients[0].adapters)
+    assert res.comm_totals["param_up"] == adapter_bytes
+    assert res.comm_totals["param_down"] == adapter_bytes
+    assert res.comm_totals["param_up_wire"] == adapter_bytes
+
+
+def test_warmup_optimizer_state_carried_across_rounds(setup):
+    # FedDPA-F used to re-init the personal-adapter AdamW every warmup round,
+    # zeroing its moments; the step counter now accumulates across rounds.
+    cfg, train, evald = setup
+    hp = HyperParams(lr=5e-3, local_steps=2, dpa_warmup_rounds=2)
+    res = _run(cfg, train, evald, "feddpa_f", hp)
+    for st in res.clients:
+        assert st.local_opt_state is not None
+        assert int(st.local_opt_state.step) == 2 * hp.local_steps
+    # and the vectorized engine threads the same state
+    res_v = _run(cfg, train, evald, "feddpa_f", hp, engine="vmap")
+    for st in res_v.clients:
+        assert int(st.local_opt_state.step) == 2 * hp.local_steps
+
+
+def test_mixed_fisher_cohort_counts_all_uploads(setup):
+    cfg, train, evald = setup
+    hp = HyperParams(lr=5e-3, local_steps=1, fisher_batches=1)
+    base = _run(cfg, train, evald, "fednano", hp)
+    server = base.server
+    thetas = [c.adapters for c in base.clients]
+    fishers = [c.fisher for c in base.clients]
+    sizes = [c.n_examples for c in base.clients]
+    fbytes = tree_bytes(fishers[1])
+    # client 0 uploads no FIM: the old `fishers[0] is not None` gate counted 0
+    fishers[0] = None
+    mixed = list(fishers)
+    mixed_fishers = [None if f is None else f for f in mixed]
+    before = server.comm.totals()["fisher_up"]
+    server = server_lib.server_aggregate(server, "fedavg", thetas,
+                                         mixed_fishers, sizes)
+    after = server.comm.totals()["fisher_up"]
+    assert after - before == fbytes * (len(thetas) - 1)
+
+
+@pytest.mark.parametrize("engine", ["sequential", "vmap"])
+def test_param_down_charged_to_downloaders(setup, engine):
+    cfg, train, evald = setup
+    hp = HyperParams(lr=5e-3, local_steps=1)
+    # LocFT downloads once (round 0) and never uploads: param_down must be
+    # exactly one broadcast to each of the K clients, not zero
+    res = _run(cfg, train, evald, "locft", hp, engine=engine)
+    gbytes = tree_bytes(res.server.global_adapters)
+    assert res.comm_totals["param_down"] == 4 * gbytes
+    assert res.comm_totals["param_up"] == 0
+
+    # under partial participation only the sampled cohort pulls the global
+    sampler = FixedSizeSampler(n=2, seed=1)
+    res = _run(cfg, train, evald, "fedavg", hp, engine=engine, sampler=sampler)
+    expect = sum(m["participants"] for m in res.round_metrics) * gbytes
+    assert res.comm_totals["param_down"] == expect
+    assert res.comm_totals["param_up"] == expect  # same cohort uploads
+
+
+def test_final_eval_flag_skips_eval(setup):
+    cfg, train, evald = setup
+    hp = HyperParams(lr=5e-3, local_steps=1)
+    res = _run(cfg, train, evald, "fedavg", hp, engine="vmap", final_eval=False)
+    assert res.client_accuracy == {}
+    assert res.avg_accuracy == 0.0
+    assert res.comm_totals["param_up"] > 0
+
+
+def test_vmap_rejects_ragged_local_steps(setup):
+    cfg, train, evald = setup
+    hp = HyperParams(lr=5e-3, local_steps=3)
+    ragged = {cid: list(b) for cid, b in train.items()}
+    ragged[0] = ragged[0][:1]  # client 0 has fewer batches than local_steps
+    with pytest.raises(ValueError, match="sequential"):
+        run_federated(jax.random.PRNGKey(0), cfg, ragged, evald,
+                      strategy="fedavg", rounds=1, hp=hp, engine="vmap")

@@ -225,8 +225,12 @@ def test_empty_cohort_round_is_skipped_gracefully(setup):
     hp = HyperParams(lr=5e-3, local_steps=1)
     res = _run(cfg, train, evald, "fedavg", hp, sampler=EveryOther())
     assert res.round_metrics[0]["participants"] == 0
-    assert res.round_metrics[0]["mean_loss"] == 0.0
+    # an empty round has no loss — None, not a fake 0.0 that would drag
+    # averages toward zero downstream
+    assert res.round_metrics[0]["mean_loss"] is None
     assert res.round_metrics[1]["participants"] == 4
+    observed = [m["mean_loss"] for m in res.round_metrics if m["mean_loss"] is not None]
+    assert observed and all(x == x for x in observed)  # NaN-free
 
 
 @pytest.mark.smoke
