@@ -1,0 +1,80 @@
+"""Regenerate the committed RunState golden fixture.
+
+    PYTHONPATH=src python scripts/gen_runstate_golden.py
+
+Writes ``tests/golden/run_state/`` — a hand-built, fully deterministic
+snapshot (arange-derived arrays, no PRNG, no training) that pins the
+on-disk layout of ``repro.checkpoint.run_state``: npz key paths, meta.json
+fields, and leaf values. ``tests/test_checkpoint_io.py`` loads it with
+today's code; if the format changes, that test fails and the change must be
+deliberate (bump RUN_STATE_VERSION and regenerate).
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import RunState, save_run_state
+from repro.core.client import ClientState
+from repro.core.comm import RoundTraffic
+from repro.optim import adamw_init
+from repro.utils import tree_zeros_like
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "tests", "golden",
+                   "run_state")
+
+
+def seq(shape, start):
+    n = int(np.prod(shape))
+    return (jnp.arange(start, start + n, dtype=jnp.float32) / 8.0).reshape(shape)
+
+
+def make_adapters(base):
+    return {"layer0": {"A": seq((2, 3), base), "B": seq((3, 2), base + 6)}}
+
+
+def make_client(cid, base, with_fisher):
+    adp = make_adapters(base)
+    opt = jax.tree.map(lambda x: jnp.full(x.shape, 0.25, x.dtype),
+                       adamw_init(adp))
+    fisher = (jax.tree.map(lambda x: jnp.ones_like(x), adp)
+              if with_fisher else None)
+    return ClientState(cid=cid, adapters=adp, opt_state=opt,
+                       n_examples=4 + cid, fisher=fisher,
+                       rounds_participated=2)
+
+
+def build():
+    return RunState(
+        engine="sequential",
+        strategy="fedavg",
+        round_idx=2,
+        server_round_idx=2,
+        rng_key=np.asarray(jax.random.PRNGKey(0)),
+        global_adapters=make_adapters(100),
+        server_opt_state=None,
+        clients=[make_client(0, 0, with_fisher=True),
+                 make_client(1, 50, with_fisher=False)],
+        tstates=[[tree_zeros_like(make_adapters(0))], [None]],
+        round_metrics=[
+            {"round": 0, "mean_loss": 1.5, "participants": 2},
+            {"round": 1, "mean_loss": 1.25, "participants": 2},
+        ],
+        comm_rounds=[
+            RoundTraffic(round_idx=0, param_up=96, param_down=48,
+                         param_up_wire=96).to_dict(),
+            RoundTraffic(round_idx=1, param_up=96, param_down=48,
+                         param_up_wire=32).to_dict(),
+        ],
+        meta_extra={"cfg_name": "golden-fixture"},
+    )
+
+
+if __name__ == "__main__":
+    out = os.path.normpath(OUT)
+    save_run_state(out, build())
+    data = np.load(os.path.join(out, "run_state.npz"))
+    print(f"wrote {out}")
+    for k in sorted(data.files):
+        print(" ", k, data[k].shape, data[k].dtype)

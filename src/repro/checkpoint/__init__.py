@@ -1,13 +1,39 @@
 from repro.checkpoint.io import (
+    CheckpointError,
+    CheckpointVersionError,
+    SERVER_CHECKPOINT_VERSION,
+    flatten_pytree,
     load_pytree,
     load_server_checkpoint,
     save_pytree,
     save_server_checkpoint,
+    unflatten_pytree,
+)
+from repro.checkpoint.run_state import (
+    RUN_STATE_VERSION,
+    BufferedState,
+    RunState,
+    load_run_state,
+    read_run_meta,
+    resolve_run_state_dir,
+    save_run_state,
 )
 
 __all__ = [
+    "CheckpointError",
+    "CheckpointVersionError",
+    "SERVER_CHECKPOINT_VERSION",
+    "RUN_STATE_VERSION",
+    "BufferedState",
+    "RunState",
+    "flatten_pytree",
     "load_pytree",
+    "load_run_state",
     "load_server_checkpoint",
+    "read_run_meta",
+    "resolve_run_state_dir",
     "save_pytree",
+    "save_run_state",
     "save_server_checkpoint",
+    "unflatten_pytree",
 ]

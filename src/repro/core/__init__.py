@@ -9,6 +9,7 @@ from repro.core.adapters import (
 )
 from repro.core.aggregation import STRATEGIES, aggregate, fedavg, fisher_merge
 from repro.core.client import ClientState, HyperParams, init_client, local_update
+from repro.core.failures import FailureModel
 from repro.core.federated import FederatedResult, run_centralized, run_federated
 from repro.core.fisher import FisherAccumulator, fisher_pass
 from repro.core.server import ServerState, init_server, server_aggregate
@@ -37,6 +38,7 @@ __all__ = [
     "HyperParams",
     "init_client",
     "local_update",
+    "FailureModel",
     "FederatedResult",
     "run_centralized",
     "run_federated",

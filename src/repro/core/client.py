@@ -74,6 +74,29 @@ def init_client(key, cfg, cid: int, n_examples: int, strategy) -> ClientState:
     return get_strategy(strategy).init_client(key, cfg, cid, n_examples)
 
 
+def client_ref_like(state: ClientState) -> ClientState:
+    """Reference structures for restoring a checkpointed ``ClientState``.
+
+    A freshly-initialized client may carry ``None`` where a checkpointed one
+    holds arrays (the FIM after its first round, the personal-adapter AdamW
+    moments after warmup). This fills those slots with structure templates —
+    fisher trees are float32 adapter-shaped (both the dedicated pass and the
+    streaming EF estimator accumulate squared grads in float32), and the
+    personal optimizer template is a fresh ``adamw_init`` — so strict
+    shape/dtype restoration has something to restore into. Values are
+    irrelevant; only structure, shapes, and dtypes matter.
+    """
+    fisher = state.fisher
+    if fisher is None:
+        fisher = jax.tree.map(
+            lambda x: jnp.zeros(jnp.shape(x), jnp.float32), state.adapters)
+    local_opt_state = state.local_opt_state
+    if local_opt_state is None and state.local_adapters is not None:
+        local_opt_state = adamw_init(state.local_adapters)
+    return dataclasses.replace(
+        state, fisher=fisher, local_opt_state=local_opt_state)
+
+
 def _combined_loss(cfg, backbone, adapters, local_adapters, batch):
     """FedDPA composition: shared adapter then personal adapter."""
     if local_adapters is None:

@@ -16,6 +16,7 @@ adapters) vs the full-model client footprint of PEFT-based FL.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
 from typing import Dict, List
 
@@ -33,6 +34,21 @@ class RoundTraffic:
     param_up_wire: int = 0   # bytes actually on the wire after upload
                              # transforms (== param_up when uncompressed)
 
+    def to_dict(self) -> Dict[str, int]:
+        """JSON-safe form (checkpoints persist the full per-round log so a
+        resumed run's totals equal the uninterrupted run's, byte for byte)."""
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, int]) -> "RoundTraffic":
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(
+                f"RoundTraffic checkpoint entry carries unknown fields "
+                f"{sorted(unknown)}; the comm-log format has diverged")
+        return cls(**d)
+
 
 @dataclass
 class CommLog:
@@ -48,6 +64,13 @@ class CommLog:
             for k in out:
                 out[k] += getattr(r, k)
         return out
+
+    def state_dict(self) -> List[Dict[str, int]]:
+        return [r.to_dict() for r in self.rounds]
+
+    @classmethod
+    def from_state_dict(cls, rounds: List[Dict[str, int]]) -> "CommLog":
+        return cls(rounds=[RoundTraffic.from_dict(d) for d in rounds])
 
 
 def adapter_upload_params(cfg) -> int:

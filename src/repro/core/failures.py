@@ -1,0 +1,91 @@
+"""Client failure injection: dropout, mid-update crashes, stragglers.
+
+Production cross-device FL never sees a clean cohort — devices go offline
+before a round starts, die mid-update after pulling the global, or finish
+late. ``FailureModel`` injects all three into the round engines so
+long-horizon runs are testable under churn:
+
+  * **dropout** — the client never starts the round: no download, no
+    compute, no upload. The cohort shrinks before any bytes move.
+  * **crash (mid-update)** — the client downloads θ_global (those bytes
+    crossed the wire and are charged), begins training, then dies: its
+    local progress is lost, its persisted ``ClientState`` is untouched
+    (``rounds_participated`` does not advance — the process died with its
+    memory), and nothing is uploaded.
+  * **straggler** — buffered engine only: the client's completion is
+    delayed by ``straggler_ticks`` simulated server ticks, so its upload
+    arrives stale and is discounted by the FedBuff staleness weight.
+
+Every draw is a pure function of ``(seed, round, cid, kind)`` via the same
+``round_key`` derivation the samplers use — no carried RNG state. That makes
+failure schedules (a) independent of the training PRNG, so toggling
+injection never perturbs a surviving client's trajectory, and (b) exactly
+replayable across checkpoint/resume: a resumed run re-derives the identical
+drop/crash/straggle pattern for every future round, which is what the
+resume-equivalence tests under churn assert.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+
+from repro.strategies.sampling import round_key
+
+# fold_in salts keeping the three draw streams independent per (round, cid)
+_KIND_DROP = 0
+_KIND_CRASH = 1
+_KIND_STRAGGLE = 2
+
+
+@dataclass(frozen=True)
+class FailureModel:
+    """Seeded, stateless client-churn model for the round engines.
+
+    ``round_idx`` below is the synchronized round for the sequential/vmap
+    engines and the simulated server tick for the buffered engine (async
+    clients fail per dispatch attempt, not per merge).
+    """
+
+    dropout_prob: float = 0.0     # P(client never starts the round)
+    crash_prob: float = 0.0       # P(client dies mid-update after download)
+    straggler_prob: float = 0.0   # P(completion delayed; buffered engine)
+    straggler_ticks: int = 3      # delay added to a straggling completion
+    seed: int = 0
+
+    def __post_init__(self):
+        for name in ("dropout_prob", "crash_prob", "straggler_prob"):
+            p = getattr(self, name)
+            if not 0.0 <= p < 1.0:
+                raise ValueError(f"{name} must be in [0, 1), got {p}")
+        if self.straggler_ticks < 1:
+            raise ValueError("straggler_ticks must be >= 1")
+
+    @property
+    def active(self) -> bool:
+        return (self.dropout_prob > 0.0 or self.crash_prob > 0.0
+                or self.straggler_prob > 0.0)
+
+    def _draw(self, kind: int, cid: int, round_idx: int) -> float:
+        key = jax.random.fold_in(
+            jax.random.fold_in(round_key(self.seed, round_idx), cid), kind)
+        return float(jax.random.uniform(key))
+
+    def drops(self, cid: int, round_idx: int) -> bool:
+        return (self.dropout_prob > 0.0
+                and self._draw(_KIND_DROP, cid, round_idx) < self.dropout_prob)
+
+    def crashes(self, cid: int, round_idx: int) -> bool:
+        return (self.crash_prob > 0.0
+                and self._draw(_KIND_CRASH, cid, round_idx) < self.crash_prob)
+
+    def straggles(self, cid: int, round_idx: int) -> bool:
+        return (self.straggler_prob > 0.0
+                and self._draw(_KIND_STRAGGLE, cid, round_idx)
+                < self.straggler_prob)
+
+    def to_dict(self) -> dict:
+        """JSON-safe form recorded in RunState meta (resume sanity check)."""
+        import dataclasses
+
+        return dataclasses.asdict(self)

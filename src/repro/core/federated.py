@@ -31,20 +31,42 @@ Three execution engines share those hooks:
     event loop fills a server buffer, and every ``buffer_size`` arrivals are
     merged with staleness-discounted weights n_k/(1+τ)^p. Stragglers delay
     only their own upload, never the round.
+
+Fault tolerance rides on the same loop: ``checkpoint_dir`` periodically
+snapshots the *entire* round state (``repro.checkpoint.RunState``: θ_global,
+ServerOpt moments, every client's AdamW/warmup state, transform residuals,
+CommLog, round RNG identity, and the buffered engine's event queue +
+version refcounts), ``resume=`` restores one and replays deterministically
+— a resumed run's metrics equal the uninterrupted run's — and
+``failures=FailureModel(...)`` injects seeded client dropout, mid-update
+crashes, and stragglers so long-horizon runs are testable under churn.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
+import os
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Union
 
 import jax
+import numpy as np
 
+from repro.checkpoint import (
+    BufferedState,
+    CheckpointError,
+    RunState,
+    load_run_state,
+    read_run_meta,
+    resolve_run_state_dir,
+    save_run_state,
+)
+from repro.checkpoint.io import _key_data
 from repro.core import client as client_lib
 from repro.core import server as server_lib
 from repro.core.client import ClientState, HyperParams
-from repro.core.comm import RoundTraffic
+from repro.core.comm import CommLog, RoundTraffic
+from repro.core.failures import FailureModel
 from repro.core.types import Batch
 from repro.strategies.base import Strategy, get_strategy
 from repro.strategies.sampling import ClientSampler
@@ -58,6 +80,11 @@ from repro.utils import tree_bytes
 
 ENGINES = ("sequential", "vmap", "buffered")
 
+# buffered-engine event kinds: RUN completes a local update; RETRY is a
+# failed attempt (dropout/crash) coming back for re-dispatch
+_EV_RUN = 0
+_EV_RETRY = 1
+
 
 @dataclass
 class FederatedResult:
@@ -69,6 +96,119 @@ class FederatedResult:
     server: Optional[object] = None
     clients: Optional[List[ClientState]] = None
     engine: str = "sequential"
+    server_opt_state: Optional[object] = None  # final ServerOpt moments
+                                               # (checkpointable; see
+                                               # save_server_checkpoint)
+
+
+class _Checkpointer:
+    """Writes versioned RunState snapshots under ``dirpath``.
+
+    Each snapshot lands in ``round_<n>/`` and ``LATEST`` is updated after a
+    successful save, so ``resume=<dirpath>`` picks up the newest complete
+    one even if the process died mid-write (a snapshot without its
+    meta.json — written last — is invisible to the resolver).
+    """
+
+    def __init__(self, dirpath: str, every: int, *, key, engine: str,
+                 strat, hp, cfg, cids, transforms, failures,
+                 start: int = 0):
+        self.dirpath = dirpath
+        self.every = every
+        self.engine = engine
+        self.strat = strat
+        self.cids = list(cids)
+        self.transforms = transforms
+        self._last = start
+        self._key_data = _key_data(key)
+        self._meta_extra = {
+            "cfg_name": cfg.name,
+            "hp": dataclasses.asdict(hp),
+            "strategy_meta": strat.checkpoint_meta(),
+            "transforms": [type(t).__name__ for t in transforms],
+            "failure_model": failures.to_dict() if failures is not None else None,
+        }
+
+    def maybe_save(self, n: int, **kw) -> None:
+        if self.every > 0 and n > self._last and n % self.every == 0:
+            self.save(n, **kw)
+
+    def final_save(self, n: int, **kw) -> None:
+        if n > self._last:
+            self.save(n, **kw)
+
+    def save(self, n: int, *, server, clients, tstates, opt_state,
+             metrics, buffered: Optional[BufferedState] = None) -> None:
+        rs = RunState(
+            engine=self.engine,
+            strategy=self.strat.name,
+            round_idx=n,
+            server_round_idx=server.round_idx,
+            rng_key=self._key_data,
+            global_adapters=server.global_adapters,
+            server_opt_state=opt_state,
+            clients=list(clients),
+            tstates=[list(tstates[cid]) for cid in self.cids],
+            round_metrics=list(metrics),
+            comm_rounds=server.comm.state_dict(),
+            buffered=buffered,
+            meta_extra=self._meta_extra,
+        )
+        sub = f"round_{n:06d}"
+        save_run_state(os.path.join(self.dirpath, sub), rs)
+        with open(os.path.join(self.dirpath, "LATEST"), "w") as f:
+            f.write(sub)
+        self._last = n
+
+
+def _load_resume(resume: str, *, key, engine, strat, hp, cfg, server,
+                 clients, server_opt, transforms) -> RunState:
+    """Restore + validate a RunState against this run's configuration.
+
+    Resume means *deterministic replay*: the checkpoint must have been
+    written by a run with the same seed, config, strategy, hyperparameters,
+    engine, and transform chain — anything else is a fork, and forks should
+    go through explicit state surgery, not a resume flag.
+    """
+    dirpath = resolve_run_state_dir(resume)
+    meta = read_run_meta(dirpath)
+
+    def bail(what, saved, current):
+        raise CheckpointError(
+            f"cannot resume from {dirpath!r}: checkpoint {what} is "
+            f"{saved!r}, this run uses {current!r} — resuming would not "
+            "replay the original run (start a fresh run or convert the "
+            "checkpoint explicitly)")
+
+    if meta["engine"] != engine:
+        bail("engine", meta["engine"], engine)
+    if meta.get("strategy_meta") != strat.checkpoint_meta():
+        bail("strategy", meta.get("strategy_meta"), strat.checkpoint_meta())
+    if meta.get("cfg_name") != cfg.name:
+        bail("config", meta.get("cfg_name"), cfg.name)
+    if meta.get("hp") != dataclasses.asdict(hp):
+        bail("hyperparameters", meta.get("hp"), dataclasses.asdict(hp))
+    tnames = [type(t).__name__ for t in transforms]
+    if meta.get("transforms") != tnames:
+        bail("transform chain", meta.get("transforms"), tnames)
+
+    rs = load_run_state(
+        dirpath,
+        clients_ref=clients,
+        global_ref=server.global_adapters,
+        server_opt_state_ref=(server_opt.init(server.global_adapters)
+                              if server_opt is not None else None),
+        transform_templates=[t.state_template(server.global_adapters)
+                             for t in transforms],
+    )
+    kd = _key_data(key)
+    if not np.array_equal(np.asarray(rs.rng_key), np.asarray(kd)):
+        raise CheckpointError(
+            f"cannot resume from {dirpath!r}: the checkpoint was written "
+            "under a different root PRNG key — the frozen backbone and "
+            "client init are re-derived from the seed at resume, so the "
+            "same key/seed is required for faithful replay")
+    return rs
 
 
 def run_federated(
@@ -92,6 +232,10 @@ def run_federated(
     staleness_power: float = 0.5,
     latency_fn: Optional[Callable[[int, int], int]] = None,
     final_eval: bool = True,
+    failures: Optional[FailureModel] = None,
+    checkpoint_dir: Optional[str] = None,
+    checkpoint_every: int = 0,
+    resume: Optional[str] = None,
 ) -> FederatedResult:
     """Run R rounds of federated NanoAdapter tuning.
 
@@ -105,6 +249,14 @@ def run_federated(
     (``rounds`` then counts server merges, not synchronized rounds).
     ``final_eval=False`` skips the end-of-run accuracy pass (benchmarks
     timing 10k-client rounds don't want 10k eval dispatches).
+
+    Fault tolerance: ``failures`` injects seeded client churn (see
+    :class:`repro.core.failures.FailureModel`); ``checkpoint_dir`` +
+    ``checkpoint_every=k`` snapshot the full round state every k rounds
+    (merges, for the buffered engine) plus once at run end (``k=0`` keeps
+    only the final snapshot); ``resume=<dir>`` restores a snapshot — pass
+    the same key/cfg/hp/strategy and the run replays exactly where it left
+    off, with metrics and comm totals matching an uninterrupted run.
     """
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; choose from {ENGINES}")
@@ -128,19 +280,49 @@ def run_federated(
     ]
     tstates = {cid: [None] * len(transforms) for cid in cids}
 
+    resume_state = None
+    if resume is not None:
+        resume_state = _load_resume(
+            resume, key=key, engine=engine, strat=strat, hp=hp, cfg=cfg,
+            server=server, clients=clients, server_opt=server_opt,
+            transforms=transforms)
+        server = dataclasses.replace(
+            server,
+            global_adapters=resume_state.global_adapters,
+            comm=CommLog.from_state_dict(resume_state.comm_rounds),
+            round_idx=resume_state.server_round_idx,
+        )
+        clients[:] = resume_state.clients
+        for i, cid in enumerate(cids):
+            tstates[cid] = list(resume_state.tstates[i])
+        if verbose:
+            print(f"  [{strat.name}] resumed at "
+                  f"{'merge' if engine == 'buffered' else 'round'} "
+                  f"{resume_state.round_idx} from {resume}")
+
+    ckpt = None
+    if checkpoint_dir:
+        ckpt = _Checkpointer(
+            checkpoint_dir, checkpoint_every, key=key, engine=engine,
+            strat=strat, hp=hp, cfg=cfg, cids=cids, transforms=transforms,
+            failures=failures,
+            start=resume_state.round_idx if resume_state is not None else 0)
+
     if engine == "buffered":
         result, server = _run_buffered(
             cfg, server, strat, clients, cids, index_of, train_data, hp,
             transforms, tstates, server_opt, rounds=rounds,
             buffer_size=buffer_size, staleness_power=staleness_power,
             latency_fn=latency_fn, use_pallas=use_pallas, verbose=verbose,
+            failures=failures, ckpt=ckpt, resume_state=resume_state,
         )
     else:
         result, server = _run_sync(
             cfg, server, strat, clients, cids, index_of, train_data, hp,
             transforms, tstates, server_opt, sampler, rounds=rounds,
             engine=engine, agg_chunk=agg_chunk, use_pallas=use_pallas,
-            verbose=verbose,
+            verbose=verbose, failures=failures, ckpt=ckpt,
+            resume_state=resume_state,
         )
 
     # final evaluation: every client, on the params its strategy designates
@@ -167,18 +349,44 @@ def _chunks(seq: List, width: int):
 def _run_sync(
     cfg, server, strat, clients, cids, index_of, train_data, hp,
     transforms, tstates, server_opt, sampler, *, rounds, engine, agg_chunk,
-    use_pallas, verbose,
+    use_pallas, verbose, failures=None, ckpt=None, resume_state=None,
 ):
     """Synchronized rounds: ``engine`` is "sequential" or "vmap"."""
     streaming = bool(agg_chunk) and strat.aggregates
     opt_state = server_opt.init(server.global_adapters) if server_opt else None
     result = FederatedResult(strategy=strat.name, engine=engine)
+    start_round = 0
+    if resume_state is not None:
+        start_round = resume_state.round_idx
+        if resume_state.server_opt_state is not None:
+            opt_state = resume_state.server_opt_state
+        result.round_metrics = list(resume_state.round_metrics)
 
-    for r in range(rounds):
+    for r in range(start_round, rounds):
         cohort = list(sampler.select(r, cids))
         gbytes = tree_bytes(server.global_adapters)
         down_bytes = 0
         wire_up = 0
+        n_dropped = n_crashed = 0
+        # failure injection: dropped clients never start (no bytes, no
+        # compute); crashed clients pull the global (bytes charged), then
+        # die mid-update — local progress lost, state untouched, no upload
+        if failures is not None and failures.active:
+            alive = []
+            for cid in cohort:
+                if failures.drops(cid, r):
+                    n_dropped += 1
+                else:
+                    alive.append(cid)
+            cohort = []
+            for cid in alive:
+                if failures.crashes(cid, r):
+                    st = clients[index_of[cid]]
+                    if strat.downloads_global(st.rounds_participated):
+                        down_bytes += gbytes
+                    n_crashed += 1
+                else:
+                    cohort.append(cid)
         losses: List[float] = []           # cohort order
         updates: List[tuple] = []          # (theta, fisher, size), cohort order
         stream_acc = strat.agg_stream_init() if streaming else None
@@ -291,8 +499,9 @@ def _run_sync(
                 )
                 server = dataclasses.replace(server, global_adapters=new_global)
         elif down_bytes:
-            # no merge this round (e.g. LocFT) but clients still pulled the
-            # global at round start — that broadcast crossed the wire
+            # no merge this round (e.g. LocFT, or every starter crashed) but
+            # clients still pulled the global at round start — that
+            # broadcast crossed the wire
             server_lib.log_downloads(server, r, down_bytes)
 
         n = len(losses)
@@ -301,18 +510,32 @@ def _run_sync(
         rm = {"round": r,
               "mean_loss": (sum(losses) / n) if n else None,
               "participants": n}
+        if failures is not None:
+            rm["dropped"] = n_dropped
+            rm["crashed"] = n_crashed
         result.round_metrics.append(rm)
         if verbose:
             shown = "skipped (no participants)" if n == 0 else f"mean local loss {rm['mean_loss']:.4f}"
             print(f"  [{strat.name}] round {r}: {shown}")
 
+        if ckpt is not None:
+            ckpt.maybe_save(r + 1, server=server, clients=clients,
+                            tstates=tstates, opt_state=opt_state,
+                            metrics=result.round_metrics)
+
+    if ckpt is not None:
+        ckpt.final_save(rounds, server=server, clients=clients,
+                        tstates=tstates, opt_state=opt_state,
+                        metrics=result.round_metrics)
+    result.server_opt_state = opt_state
     return result, server
 
 
 def _run_buffered(
     cfg, server, strat, clients, cids, index_of, train_data, hp,
     transforms, tstates, server_opt, *, rounds, buffer_size, staleness_power,
-    latency_fn, use_pallas, verbose,
+    latency_fn, use_pallas, verbose, failures=None, ckpt=None,
+    resume_state=None,
 ):
     """FedBuff-style async engine: merge every ``buffer_size`` completions.
 
@@ -322,6 +545,19 @@ def _run_buffered(
     trains against the global *version it last downloaded*; its upload is
     merged with weight n_k/(1+τ)^p where τ is the number of server merges
     that happened while it was running. ``rounds`` counts server merges.
+
+    Failure semantics (per *dispatch attempt*, keyed by the simulated tick):
+    a dropped client never downloads and retries next tick; a crashed
+    client downloads (bytes charged), trains for its latency, then its
+    upload is lost and it re-dispatches. Stragglers add
+    ``straggler_ticks`` to their completion time, so their uploads arrive
+    stale and take the staleness discount.
+
+    Checkpoints are taken at tick boundaries once ``checkpoint_every``
+    merges have accumulated: the snapshot carries the event heap, live
+    version snapshots with refcounts, and the partially-filled merge
+    buffer, so a resumed run pops the identical completion order the
+    uninterrupted run would have.
     """
     if not strat.aggregates:
         raise ValueError(
@@ -339,23 +575,59 @@ def _run_buffered(
     # the snapshot they downloaded, so memory is O(distinct live versions)
     version = 0
     snapshots: Dict[int, list] = {version: [server.global_adapters, 0]}
-    events: List[tuple] = []  # (finish_tick, cid, version_started)
+    events: List[tuple] = []  # (finish_tick, cid, version_started, kind)
     merges = 0
     acc_up = {"param_up": 0, "fisher_up": 0, "wire_up": 0, "down": 0}
     buffer: List[tuple] = []  # (theta, fisher, size, loss_mean, staleness)
 
     def dispatch(cid: int, now: int):
+        if failures is not None and failures.drops(cid, now):
+            # offline this tick: no download, no snapshot pin; retry next tick
+            heapq.heappush(events, (now + 1, cid, version, _EV_RETRY))
+            return
         st = clients[index_of[cid]]
         if strat.downloads_global(st.rounds_participated):
             acc_up["down"] += gbytes
-        snapshots[version][1] += 1
         lat = max(1, int(latency_fn(cid, version)))
-        heapq.heappush(events, (now + lat, cid, version))
+        if failures is not None and failures.straggles(cid, now):
+            lat += failures.straggler_ticks
+        if failures is not None and failures.crashes(cid, now):
+            # downloaded, then died mid-update: the broadcast crossed the
+            # wire but nothing comes back and no snapshot stays pinned
+            heapq.heappush(events, (now + lat, cid, version, _EV_RETRY))
+            return
+        snapshots[version][1] += 1
+        heapq.heappush(events, (now + lat, cid, version, _EV_RUN))
 
-    for cid in cids:
-        dispatch(cid, 0)
+    if resume_state is not None:
+        b = resume_state.buffered
+        if b is None:
+            raise CheckpointError(
+                "checkpoint has no buffered-engine state; it was written by "
+                "a synchronized engine")
+        version = b.version
+        snapshots = dict(b.snapshots)
+        # the current version's snapshot IS the restored global (saved once)
+        snapshots.setdefault(version, [server.global_adapters, 0])
+        events = list(b.events)  # a valid heap, restored verbatim
+        buffer = list(b.buffer)
+        acc_up = dict(b.acc_up)
+        merges = resume_state.round_idx
+        if resume_state.server_opt_state is not None:
+            opt_state = resume_state.server_opt_state
+        result.round_metrics = list(resume_state.round_metrics)
+    else:
+        for cid in cids:
+            dispatch(cid, 0)
 
     while merges < rounds:
+        if ckpt is not None:
+            ckpt.maybe_save(
+                merges, server=server, clients=clients, tstates=tstates,
+                opt_state=opt_state, metrics=result.round_metrics,
+                buffered=BufferedState(
+                    version=version, events=list(events),
+                    snapshots=snapshots, buffer=buffer, acc_up=acc_up))
         # drain every completion in this simulated tick before re-dispatching
         # any of them: a client re-downloads only after its upload is acked,
         # by which point the server has folded everything this tick produced
@@ -364,8 +636,10 @@ def _run_buffered(
         now = events[0][0]
         done_this_tick: List[int] = []
         while events and events[0][0] == now and merges < rounds:
-            _, cid, v_start = heapq.heappop(events)
+            _, cid, v_start, kind = heapq.heappop(events)
             done_this_tick.append(cid)
+            if kind != _EV_RUN:
+                continue  # failed attempt coming back for re-dispatch
             snap_global, _ = snapshots[v_start]
             i = index_of[cid]
             clients[i], metrics = client_lib.local_update(
@@ -427,6 +701,20 @@ def _run_buffered(
         for cid in done_this_tick:
             dispatch(cid, now)
 
+    if ckpt is not None:
+        # the exit-state snapshot lets a later run extend this one with more
+        # merges (resume + larger ``rounds``); note that stopping at exactly
+        # ``rounds`` merges leaves same-tick completions undrained, so an
+        # extended run is a continuation of THIS schedule, not a replay of a
+        # longer uninterrupted one — mid-run snapshots (checkpoint_every)
+        # are the replay-equivalent ones
+        ckpt.final_save(
+            merges, server=server, clients=clients, tstates=tstates,
+            opt_state=opt_state, metrics=result.round_metrics,
+            buffered=BufferedState(
+                version=version, events=list(events), snapshots=snapshots,
+                buffer=buffer, acc_up=acc_up))
+    result.server_opt_state = opt_state
     return result, server
 
 

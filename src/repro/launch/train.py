@@ -19,7 +19,7 @@ import jax
 
 from repro.checkpoint import save_server_checkpoint
 from repro.configs import get_smoke_config, list_archs
-from repro.core import HyperParams, run_centralized, run_federated
+from repro.core import FailureModel, HyperParams, run_centralized, run_federated
 from repro.data import make_federated_data
 from repro.strategies import UniformSampler, available_strategies
 from repro.strategies.server_opt import FedAdamOpt, FedAvgMOpt
@@ -57,6 +57,23 @@ def main(argv=None):
     ap.add_argument("--seq-len", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="runs/train")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="snapshot the full round state every N rounds under "
+                         "<out>/state (0 = only the final snapshot)")
+    ap.add_argument("--resume", default=None, metavar="DIR",
+                    help="resume from a RunState snapshot directory (pass the "
+                         "snapshot itself or its parent; LATEST is followed). "
+                         "Use the same seed/arch/strategy flags as the "
+                         "original run — replay is deterministic")
+    ap.add_argument("--dropout-prob", type=float, default=0.0,
+                    help="per-round probability a sampled client never starts")
+    ap.add_argument("--crash-prob", type=float, default=0.0,
+                    help="per-round probability a client dies mid-update "
+                         "(download charged, progress lost)")
+    ap.add_argument("--straggler-prob", type=float, default=0.0,
+                    help="probability a buffered-engine client is delayed")
+    ap.add_argument("--failure-seed", type=int, default=0,
+                    help="seed for the failure schedule (independent of --seed)")
     ap.add_argument("--use-pallas", action="store_true",
                     help="route LoRA/Fisher-merge through the Pallas kernels (interpret mode)")
     args = ap.parse_args(argv)
@@ -90,12 +107,22 @@ def main(argv=None):
             server_opt = cls(lr=args.server_lr) if args.server_lr is not None else cls()
         sampler = UniformSampler(frac=args.client_frac, seed=args.seed) \
             if args.client_frac < 1.0 else None
+        failures = None
+        if args.dropout_prob or args.crash_prob or args.straggler_prob:
+            failures = FailureModel(dropout_prob=args.dropout_prob,
+                                    crash_prob=args.crash_prob,
+                                    straggler_prob=args.straggler_prob,
+                                    seed=args.failure_seed)
         res = run_federated(key, cfg, train, evald, strategy=args.strategy,
                             rounds=args.rounds, hp=hp, verbose=True,
                             use_pallas=args.use_pallas,
                             server_opt=server_opt, sampler=sampler,
                             engine=args.engine, agg_chunk=args.agg_chunk,
-                            buffer_size=args.buffer_size)
+                            buffer_size=args.buffer_size,
+                            failures=failures,
+                            checkpoint_dir=os.path.join(args.out, "state"),
+                            checkpoint_every=args.checkpoint_every,
+                            resume=args.resume)
     dt = time.time() - t0
 
     os.makedirs(args.out, exist_ok=True)
@@ -112,7 +139,9 @@ def main(argv=None):
         json.dump(summary, f, indent=1)
     if res.server is not None:
         save_server_checkpoint(os.path.join(args.out, "ckpt"), res.server,
-                               round_idx=args.rounds)
+                               round_idx=args.rounds,
+                               server_opt_state=res.server_opt_state,
+                               rng_key=key)
     print(f"== done in {dt:.1f}s: avg client accuracy {res.avg_accuracy:.4f}")
     print(f"   per-client: { {k: round(v, 4) for k, v in res.client_accuracy.items()} }")
     if res.comm_totals:

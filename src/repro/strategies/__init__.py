@@ -32,14 +32,22 @@ from repro.strategies.builtin import (
     FedProx,
     LocFT,
 )
-from repro.strategies.sampling import ClientSampler, FixedSizeSampler, UniformSampler
+from repro.strategies.sampling import (
+    ClientSampler,
+    FixedSizeSampler,
+    UniformSampler,
+    round_key,
+)
 from repro.strategies.server_opt import FedAdamOpt, FedAvgMOpt, FedBuffOpt, ServerOpt
 from repro.strategies.transforms import (
+    WIRE_FORMAT_VERSION,
     ClipNoiseDP,
     Int8EFQuant,
     TopKSparsify,
     TransformCtx,
     UpdateTransform,
+    WireMessage,
+    decode_wire,
     default_transforms,
 )
 
@@ -59,14 +67,18 @@ __all__ = [
     "ClientSampler",
     "FixedSizeSampler",
     "UniformSampler",
+    "round_key",
     "FedAdamOpt",
     "FedAvgMOpt",
     "FedBuffOpt",
     "ServerOpt",
+    "WIRE_FORMAT_VERSION",
     "ClipNoiseDP",
     "Int8EFQuant",
     "TopKSparsify",
     "TransformCtx",
     "UpdateTransform",
+    "WireMessage",
+    "decode_wire",
     "default_transforms",
 ]

@@ -179,6 +179,26 @@ class Strategy:
         """Optional ServerOpt applied to the merged result (None = identity)."""
         return None
 
+    # -- checkpointing ------------------------------------------------------
+    # Strategies are frozen dataclasses with no mutable state, so a RunState
+    # snapshot needs only this identity record: the streaming-merge
+    # accumulators (agg_stream_*) live strictly within one round/merge and
+    # are empty at every checkpoint boundary by construction. Anything a
+    # strategy carries *across* rounds belongs in ClientState or a
+    # transform's threaded state, both of which the checkpoint persists.
+
+    def checkpoint_meta(self) -> Dict[str, Any]:
+        """Identity recorded in RunState meta and validated on resume, so a
+        checkpoint written under one method can't silently resume under
+        another (e.g. a FedNano run restored as FedAvg would drop the FIM
+        semantics without a single shape mismatch to catch it)."""
+        return {
+            "name": self.name,
+            "wants_fisher": self.wants_fisher,
+            "dual_adapters": self.dual_adapters,
+            "aggregates": self.aggregates,
+        }
+
     # -- evaluation ---------------------------------------------------------
     def eval_params(self, global_adapters, client) -> Tuple[Any, Optional[Any]]:
         """(shared adapters, personal adapters) this client evaluates with."""

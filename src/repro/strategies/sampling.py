@@ -6,6 +6,13 @@ is the paper setting and consumes no randomness, so seeded runs without a
 sampler are bit-identical to the legacy loop. ``UniformSampler`` draws
 ⌈C·K⌉ clients without replacement from its own PRNG stream (independent of
 the training keys, so changing participation never reshuffles init/DP noise).
+
+Samplers are *stateless*: the round's key is ``round_key(seed, round_idx)``,
+a pure function of (seed, round index) with no carried RNG state. That is a
+checkpoint/resume contract, not a style choice — a resumed run replays round
+r's cohort exactly because nothing about earlier rounds feeds the draw.
+Custom samplers must keep this property (derive per-round keys via
+``round_key``/``fold_in``; never iterate a key across rounds).
 """
 from __future__ import annotations
 
@@ -13,6 +20,16 @@ from dataclasses import dataclass
 from typing import List, Sequence
 
 import jax
+
+
+def round_key(seed: int, round_idx: int):
+    """Deterministic per-round PRNG key: ``fold_in(PRNGKey(seed), round)``.
+
+    Shared by samplers and the failure models so every source of protocol
+    randomness is replayable from (seed, round) alone — the property the
+    resume-equivalence tests pin.
+    """
+    return jax.random.fold_in(jax.random.PRNGKey(seed), round_idx)
 
 
 @dataclass(frozen=True)
@@ -33,7 +50,7 @@ class UniformSampler(ClientSampler):
     def select(self, round_idx: int, cids: Sequence[int]) -> List[int]:
         k = len(cids)
         n = min(k, max(1, int(round(self.frac * k))))
-        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), round_idx)
+        key = round_key(self.seed, round_idx)
         idx = jax.random.choice(key, k, shape=(n,), replace=False)
         return sorted(cids[int(i)] for i in idx)
 
@@ -52,6 +69,6 @@ class FixedSizeSampler(ClientSampler):
         n = min(max(1, self.n), k)
         if n == k:
             return list(cids)
-        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), round_idx)
+        key = round_key(self.seed, round_idx)
         idx = jax.random.choice(key, k, shape=(n,), replace=False)
         return sorted(cids[int(i)] for i in idx)

@@ -8,6 +8,13 @@ the actual step (Reddi et al. 2021, "Adaptive Federated Optimization"):
 
 ``None`` (the default) is the identity: θ_global ← merged, which is exactly
 the paper's Alg. 1 and the legacy behaviour.
+
+Checkpoint contract: a ``ServerOpt`` is a stateless frozen dataclass; all
+mutable state lives in the opt-state pytree threaded through ``apply``, and
+``init(params)`` doubles as the *restore template* — ``RunState``
+checkpoints save the moments and restore them into ``init``'s structure
+with strict shape/dtype checks, which is why a killed FedAdam/FedAvgM run
+resumes with its momentum intact instead of silently re-warming from zero.
 """
 from __future__ import annotations
 

@@ -11,14 +11,35 @@ engine folds into ``CommLog`` as ``param_up_wire``.
 ``wire=None`` means "size unchanged" (e.g. clip+noise). Transforms are
 frozen dataclasses (hashable, value-equal); per-client state is threaded by
 the engine, so one transform instance serves every client.
+
+Wire format
+-----------
+Every payload is **self-describing**: ``encode`` produces a
+:class:`WireMessage` stamped with ``(codec, version)`` and the exact byte
+count the encoding occupies on the wire, and ``decode_wire`` dispatches on
+the stamp — rejecting unknown codecs and versions instead of guessing.
+``apply`` is implemented as encode→decode, so ``param_up_wire`` accounting
+is by construction the size of the message that actually crossed, and the
+accounting survives format evolution: bump ``WIRE_FORMAT_VERSION`` when an
+encoding changes and old readers fail loudly.
+
+Transforms that carry per-client state across rounds (error-feedback
+residuals) also expose ``state_template(global_ref)`` — the reference
+structure checkpoint/resume restores the state into. A transform with
+persistent state but no template cannot ride through a ``RunState``
+checkpoint.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, NamedTuple, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+
+# Version of every codec's on-the-wire encoding. Bump when any payload
+# layout changes; decode_wire rejects messages from other versions.
+WIRE_FORMAT_VERSION = 1
 
 
 class TransformCtx(NamedTuple):
@@ -28,12 +49,112 @@ class TransformCtx(NamedTuple):
     round_idx: int
 
 
+class WireMessage(NamedTuple):
+    """A self-describing upload payload.
+
+    ``nbytes`` is what CommLog records as ``param_up_wire`` — tests pin that
+    it equals the encoded payload exactly. ``payload`` is codec-specific
+    (pytrees of arrays); ``decode_wire`` reconstructs the θ the server sees.
+    """
+
+    codec: str
+    version: int
+    payload: Any
+    nbytes: int
+
+
+_DECODERS: Dict[str, Callable] = {}
+
+
+def _codec(name: str):
+    """Register ``fn(msg, global_ref) -> theta`` as the decoder for a codec."""
+
+    def deco(fn):
+        _DECODERS[name] = fn
+        return fn
+
+    return deco
+
+
+def decode_wire(msg: WireMessage, global_ref):
+    """Server-side decode: dispatch on the (codec, version) stamp.
+
+    Unknown stamps are protocol errors, never silent fallbacks — a server
+    one format behind must refuse the upload rather than mis-reconstruct it.
+    """
+    if msg.version != WIRE_FORMAT_VERSION:
+        raise ValueError(
+            f"wire message {msg.codec!r} has format version {msg.version}, "
+            f"this code speaks v{WIRE_FORMAT_VERSION}; refusing to decode")
+    dec = _DECODERS.get(msg.codec)
+    if dec is None:
+        raise ValueError(
+            f"unknown wire codec {msg.codec!r}; known: "
+            f"{', '.join(sorted(_DECODERS))}")
+    return dec(msg, global_ref)
+
+
+@_codec("identity")
+@_codec("dp_fp32")
+def _decode_dense(msg, global_ref):
+    # dense fp32 tree: the payload IS the upload
+    return msg.payload
+
+
+@_codec("int8_ef")
+def _decode_int8(msg, global_ref):
+    from repro.core.compression import dequantize_delta, QuantizedDelta
+    from repro.utils import tree_add
+
+    q = QuantizedDelta(payload=msg.payload["q"], scales=msg.payload["scales"],
+                       base_bytes=0, wire_bytes=msg.nbytes)
+    return tree_add(global_ref, dequantize_delta(q))
+
+
+def _scatter_topk(ref_leaf, packed):
+    vals, idx = packed["vals"], packed["idx"]
+    flat = jnp.zeros((ref_leaf.size,), ref_leaf.dtype).at[idx].set(vals)
+    return flat.reshape(ref_leaf.shape)
+
+
+@_codec("topk")
+def _decode_topk(msg, global_ref):
+    from repro.utils import tree_add
+
+    # global_ref's treedef bounds the map, so each packed {vals, idx} dict
+    # arrives whole at its leaf position
+    sparse = jax.tree.map(_scatter_topk, global_ref, msg.payload)
+    return tree_add(global_ref, sparse)
+
+
 @dataclass(frozen=True)
 class UpdateTransform:
-    """Identity transform; subclass and override ``apply``."""
+    """Identity transform; subclass and override ``encode`` (and, for
+    transforms whose wire size differs from the dense tree, set
+    ``wire_transparent = False`` so ``apply`` reports the encoded size)."""
+
+    # True => apply() reports wire=None ("size unchanged"): the engine falls
+    # back to the dense tree size, and a later size-changing transform in
+    # the chain may still override it. Size-changing codecs set False.
+    wire_transparent = True
+
+    def encode(self, ctx: TransformCtx, theta, global_ref,
+               state) -> Tuple[WireMessage, Any]:
+        from repro.utils import tree_bytes
+
+        msg = WireMessage(codec="identity", version=WIRE_FORMAT_VERSION,
+                          payload=theta, nbytes=tree_bytes(theta))
+        return msg, state
+
+    def state_template(self, global_ref):
+        """Reference structure for this transform's carried per-client state
+        (None = stateless; checkpoint/resume then has nothing to restore)."""
+        return None
 
     def apply(self, ctx: TransformCtx, theta, global_ref, state):
-        return theta, state, None
+        msg, state = self.encode(ctx, theta, global_ref, state)
+        theta = decode_wire(msg, global_ref)
+        return theta, state, (None if self.wire_transparent else msg.nbytes)
 
 
 @dataclass(frozen=True)
@@ -44,8 +165,9 @@ class ClipNoiseDP(UpdateTransform):
     clip_norm: float = 1.0
     noise_mult: float = 0.0
 
-    def apply(self, ctx, theta, global_ref, state):
+    def encode(self, ctx, theta, global_ref, state):
         from repro.core.privacy import privatize_update
+        from repro.utils import tree_bytes
 
         # deterministic per-(client, round) noise stream, independent of the
         # training PRNG so DP on/off never perturbs the learning trajectory
@@ -54,7 +176,9 @@ class ClipNoiseDP(UpdateTransform):
             key, theta, global_ref,
             clip_norm=self.clip_norm, noise_mult=self.noise_mult,
         )
-        return theta, state, None
+        msg = WireMessage(codec="dp_fp32", version=WIRE_FORMAT_VERSION,
+                          payload=theta, nbytes=tree_bytes(theta))
+        return msg, state
 
 
 @dataclass(frozen=True)
@@ -62,13 +186,22 @@ class Int8EFQuant(UpdateTransform):
     """int8 delta quantization with error feedback (≈4× smaller uploads);
     the residual is carried in ``state`` and folded into the next round."""
 
-    def apply(self, ctx, theta, global_ref, state):
+    wire_transparent = False
+
+    def encode(self, ctx, theta, global_ref, state):
         from repro.core.compression import compress_update, init_error_feedback
-        from repro.utils import tree_add
 
         err = state if state is not None else init_error_feedback(theta)
-        q, err, recon = compress_update(theta, global_ref, err)
-        return tree_add(global_ref, recon), err, q.wire_bytes
+        q, err, _ = compress_update(theta, global_ref, err)
+        msg = WireMessage(codec="int8_ef", version=WIRE_FORMAT_VERSION,
+                          payload={"q": q.payload, "scales": q.scales},
+                          nbytes=q.wire_bytes)
+        return msg, err
+
+    def state_template(self, global_ref):
+        from repro.core.compression import init_error_feedback
+
+        return init_error_feedback(global_ref)
 
 
 @dataclass(frozen=True)
@@ -77,9 +210,10 @@ class TopKSparsify(UpdateTransform):
     with error feedback; wire = kept values + int32 indices."""
 
     frac: float = 0.1
+    wire_transparent = False
 
-    def apply(self, ctx, theta, global_ref, state):
-        from repro.utils import tree_add, tree_sub
+    def encode(self, ctx, theta, global_ref, state):
+        from repro.utils import tree_sub, tree_add
 
         delta = tree_sub(theta, global_ref)
         if state is not None:
@@ -91,16 +225,26 @@ class TopKSparsify(UpdateTransform):
             nonlocal wire
             k = max(1, int(round(self.frac * x.size)))
             wire += k * (x.dtype.itemsize + 4)
-            # index-based mask: exactly k entries survive even under ties
-            # (a threshold compare would keep extras and falsify `wire`)
+            # index-based selection: exactly k entries survive even under
+            # ties (a threshold compare would keep extras and falsify wire)
             flat = x.reshape(-1)
             _, idx = jax.lax.top_k(jnp.abs(flat), k)
-            mask = jnp.zeros(flat.shape, bool).at[idx].set(True)
-            return jnp.where(mask, flat, jnp.zeros_like(flat)).reshape(x.shape)
+            idx = idx.astype(jnp.int32)
+            return {"vals": flat[idx], "idx": idx}
 
-        sparse = jax.tree.map(keep, delta)
+        packed = jax.tree.map(keep, delta)
+        msg = WireMessage(codec="topk", version=WIRE_FORMAT_VERSION,
+                          payload=packed, nbytes=wire)
+        # error feedback: exactly what the sparse reconstruction drops (the
+        # scatter here is the same computation decode_wire performs)
+        sparse = jax.tree.map(_scatter_topk, delta, packed)
         err = tree_sub(delta, sparse)
-        return tree_add(global_ref, sparse), err, wire
+        return msg, err
+
+    def state_template(self, global_ref):
+        from repro.utils import tree_zeros_like
+
+        return tree_zeros_like(global_ref)
 
 
 def default_transforms(hp) -> Tuple[UpdateTransform, ...]:

@@ -1,0 +1,281 @@
+"""Resume-equivalence harness: kill-and-resume must replay the original run.
+
+The contract under test: a run checkpointed at round r and resumed to round
+R produces the SAME metrics, comm totals, accuracies, and final parameters
+as an uninterrupted R-round run (within 1e-6 — everything downstream of the
+restore is the same jitted computation on the same floats). That holds
+because every source of protocol randomness is a pure function of
+(seed, round, cid) — see repro.strategies.sampling.round_key — and because
+RunState persists *all* carried state: ServerOpt moments, per-client AdamW
+moments (global and personal), FedDPA warmup counters, transform error
+feedback, the CommLog, and the buffered engine's event queue.
+
+Engine split:
+  * sequential / vmap: the round loop body never reads ``rounds``, so
+    literally running 3 rounds, saving, and resuming to 6 equals a 6-round
+    run. Tested for every paper strategy.
+  * buffered: stopping AT the merge cap leaves same-tick completions
+    undrained (exit state != pass-through state), so replay-equivalent
+    snapshots are the mid-run ones (checkpoint_every) — the test resumes
+    from a full run's intermediate snapshot, which is byte-identical to the
+    state a killed run would have left.
+
+Failure injection rides the same determinism: the churn schedule is a pure
+function of (failure seed, round, cid), so runs under dropout/crash repeat
+exactly and comm accounting can be replayed analytically.
+"""
+import math
+import os
+
+import jax
+import pytest
+
+from repro.checkpoint import CheckpointError
+from repro.configs import get_smoke_config
+from repro.core import FailureModel, HyperParams, run_federated
+from repro.data import make_federated_data
+from repro.strategies import FixedSizeSampler, Int8EFQuant, TopKSparsify
+from repro.strategies.server_opt import FedAdamOpt
+from repro.utils import tree_allclose, tree_bytes, tree_sq_norm
+
+PAPER_STRATEGIES = ("fednano", "fednano_ef", "fedavg", "fedprox",
+                    "feddpa_f", "locft")
+ROUNDS = 4
+CUT = 2  # checkpoint/kill boundary
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("llava-1.5-7b").with_(
+        n_layers=1, d_model=32, n_heads=2, n_kv_heads=2, head_dim=16,
+        d_ff=64, frontend_dim=16,
+    )
+    train, evald, _ = make_federated_data(
+        cfg, n_clients=3, examples_per_client=8, alpha=100.0, batch_size=2,
+        seq_len=8,
+    )
+    return cfg, train, evald
+
+
+def _hp(**kw):
+    kw.setdefault("lr", 5e-3)
+    kw.setdefault("local_steps", 1)
+    kw.setdefault("fisher_batches", 1)
+    return HyperParams(**kw)
+
+
+def assert_equivalent(full, resumed):
+    """Every observable of the resumed run matches the uninterrupted one."""
+    fl = [m["mean_loss"] for m in full.round_metrics]
+    rl = [m["mean_loss"] for m in resumed.round_metrics]
+    assert len(fl) == len(rl)
+    for a, b in zip(fl, rl):
+        if a is None or b is None:
+            assert a is None and b is None
+        else:
+            assert b == pytest.approx(a, rel=1e-6)
+    assert resumed.comm_totals == full.comm_totals
+    assert resumed.avg_accuracy == pytest.approx(full.avg_accuracy, abs=1e-9)
+    assert float(tree_sq_norm(resumed.server.global_adapters)) == pytest.approx(
+        float(tree_sq_norm(full.server.global_adapters)), rel=1e-6)
+    for cf, cr in zip(full.clients, resumed.clients):
+        assert tree_allclose(cf.adapters, cr.adapters, atol=1e-6)
+        assert cf.rounds_participated == cr.rounds_participated
+
+
+def _kill_and_resume(setup, tmp_path, strategy, *, engine="sequential",
+                     hp=None, **kw):
+    """run CUT rounds + save → resume to ROUNDS; return (full, resumed)."""
+    cfg, train, evald = setup
+    hp = hp or _hp()
+    key = jax.random.PRNGKey(0)
+    d = str(tmp_path / "state")
+    full = run_federated(key, cfg, train, evald, strategy=strategy,
+                         rounds=ROUNDS, hp=hp, engine=engine, **kw)
+    run_federated(key, cfg, train, evald, strategy=strategy, rounds=CUT,
+                  hp=hp, engine=engine, checkpoint_dir=d, final_eval=False,
+                  **kw)
+    resumed = run_federated(key, cfg, train, evald, strategy=strategy,
+                            rounds=ROUNDS, hp=hp, engine=engine, resume=d,
+                            **kw)
+    return full, resumed
+
+
+# ---------------------------------------------------------------------------
+# resume equivalence: every paper strategy, sequential engine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strategy", PAPER_STRATEGIES)
+def test_resume_equivalence_sequential(setup, tmp_path, strategy):
+    hp = _hp(dpa_warmup_rounds=1) if strategy == "feddpa_f" else _hp()
+    full, resumed = _kill_and_resume(setup, tmp_path, strategy, hp=hp)
+    assert_equivalent(full, resumed)
+
+
+@pytest.mark.smoke
+@pytest.mark.parametrize("strategy", ("fednano", "fedavg"))
+def test_resume_equivalence_vmap(setup, tmp_path, strategy):
+    full, resumed = _kill_and_resume(setup, tmp_path, strategy, engine="vmap")
+    assert_equivalent(full, resumed)
+
+
+@pytest.mark.parametrize("strategy", ("fednano", "fedavg"))
+def test_resume_equivalence_buffered(setup, tmp_path, strategy):
+    # buffered snapshots are replay-equivalent at tick boundaries mid-run:
+    # resume from the full run's intermediate snapshot (== what a killed run
+    # leaves behind) rather than from an exit-state snapshot
+    cfg, train, evald = setup
+    hp = _hp()
+    key = jax.random.PRNGKey(0)
+    d = str(tmp_path / "state")
+    lat = lambda cid, version: 1 + (cid % 2)  # noqa: E731 — heterogeneous
+    full = run_federated(key, cfg, train, evald, strategy=strategy,
+                         rounds=ROUNDS, hp=hp, engine="buffered",
+                         buffer_size=2, latency_fn=lat,
+                         checkpoint_dir=d, checkpoint_every=CUT)
+    resumed = run_federated(key, cfg, train, evald, strategy=strategy,
+                            rounds=ROUNDS, hp=hp, engine="buffered",
+                            buffer_size=2, latency_fn=lat,
+                            resume=os.path.join(d, f"round_{CUT:06d}"))
+    assert_equivalent(full, resumed)
+
+
+# ---------------------------------------------------------------------------
+# carried state actually survives: moments, warmup counters, residuals
+# ---------------------------------------------------------------------------
+
+@pytest.mark.smoke
+def test_resume_restores_server_opt_moments(setup, tmp_path):
+    # FedAdam's m/v moments must come back: a resume that silently re-zeroed
+    # them would still run (shapes match!) but take differently-sized steps
+    full, resumed = _kill_and_resume(setup, tmp_path, "fedavg",
+                                     server_opt=FedAdamOpt(lr=0.5))
+    assert resumed.server_opt_state is not None
+    assert set(resumed.server_opt_state) == {"m", "v"}
+    assert tree_allclose(resumed.server_opt_state["m"],
+                         full.server_opt_state["m"], atol=1e-6)
+    assert_equivalent(full, resumed)
+
+
+def test_resume_mid_warmup_feddpa(setup, tmp_path):
+    # cut INSIDE the personal-adapter warmup window: rounds_participated and
+    # local_opt_state must restore or the post-resume rounds would re-run
+    # warmup (or skip it) on the wrong adapter
+    hp = _hp(dpa_warmup_rounds=CUT + 1)
+    full, resumed = _kill_and_resume(setup, tmp_path, "feddpa_f", hp=hp)
+    assert_equivalent(full, resumed)
+    for cf, cr in zip(full.clients, resumed.clients):
+        assert tree_allclose(cf.local_adapters, cr.local_adapters, atol=1e-6)
+
+
+@pytest.mark.parametrize("transform", [Int8EFQuant(), TopKSparsify(frac=0.25)],
+                         ids=["int8_ef", "topk"])
+def test_resume_restores_transform_residuals(setup, tmp_path, transform):
+    # error-feedback residuals are carried client state: dropping them on
+    # resume biases every subsequent quantized upload
+    full, resumed = _kill_and_resume(setup, tmp_path, "fedavg",
+                                     transforms=(transform,))
+    assert_equivalent(full, resumed)
+
+
+@pytest.mark.smoke
+def test_resume_partial_participation(setup, tmp_path):
+    # stateless sampler contract: the resumed run re-draws round r's cohort
+    # from (seed, r) and gets the identical cohort the full run saw
+    full, resumed = _kill_and_resume(setup, tmp_path, "fednano",
+                                     sampler=FixedSizeSampler(n=2, seed=11))
+    assert_equivalent(full, resumed)
+
+
+# ---------------------------------------------------------------------------
+# failure injection: deterministic churn, exact accounting
+# ---------------------------------------------------------------------------
+
+def test_failure_injection_finite_and_deterministic(setup):
+    cfg, train, evald = setup
+    hp = _hp()
+    fm = FailureModel(dropout_prob=0.3, crash_prob=0.2, seed=7)
+    key = jax.random.PRNGKey(0)
+    runs = [run_federated(key, cfg, train, evald, strategy="fedavg",
+                          rounds=ROUNDS, hp=hp, failures=fm)
+            for _ in range(2)]
+    for m in runs[0].round_metrics:
+        assert m["mean_loss"] is None or math.isfinite(m["mean_loss"])
+        assert m["participants"] + m["dropped"] + m["crashed"] == len(train)
+    assert ([m["mean_loss"] for m in runs[0].round_metrics]
+            == [m["mean_loss"] for m in runs[1].round_metrics])
+    assert runs[0].comm_totals == runs[1].comm_totals
+
+
+def test_failure_injection_exact_comm_accounting(setup):
+    # replay the seeded churn schedule by hand and predict every byte:
+    # dropped clients move nothing; crashed clients charge one download;
+    # survivors charge a download and an upload
+    cfg, train, evald = setup
+    hp = _hp()
+    fm = FailureModel(dropout_prob=0.3, crash_prob=0.2, seed=7)
+    res = run_federated(jax.random.PRNGKey(0), cfg, train, evald,
+                        strategy="fedavg", rounds=ROUNDS, hp=hp, failures=fm)
+    gbytes = tree_bytes(res.server.global_adapters)
+    exp_down = exp_up = 0
+    for r in range(ROUNDS):
+        for cid in sorted(train):
+            if fm.drops(cid, r):
+                continue
+            exp_down += gbytes          # fedavg always downloads
+            if not fm.crashes(cid, r):
+                exp_up += gbytes        # dense upload, same tree as global
+    assert res.comm_totals["param_down"] == exp_down
+    assert res.comm_totals["param_up"] == exp_up
+    assert res.comm_totals["param_up_wire"] == exp_up
+
+
+@pytest.mark.smoke
+def test_resume_with_failures(setup, tmp_path):
+    # churn schedule is (seed, round, cid)-pure: resume replays the same
+    # dropouts/crashes the uninterrupted run saw
+    fm = FailureModel(dropout_prob=0.3, crash_prob=0.1, seed=5)
+    full, resumed = _kill_and_resume(setup, tmp_path, "fednano", failures=fm)
+    assert_equivalent(full, resumed)
+
+
+def test_buffered_with_failures_completes(setup):
+    cfg, train, evald = setup
+    fm = FailureModel(dropout_prob=0.2, crash_prob=0.1, straggler_prob=0.3,
+                      straggler_ticks=2, seed=3)
+    res = run_federated(jax.random.PRNGKey(0), cfg, train, evald,
+                        strategy="fedavg", rounds=3, hp=_hp(),
+                        engine="buffered", buffer_size=2, failures=fm)
+    assert len(res.round_metrics) == 3
+    assert all(math.isfinite(m["mean_loss"]) for m in res.round_metrics)
+    assert all(math.isfinite(a) for a in res.client_accuracy.values())
+
+
+# ---------------------------------------------------------------------------
+# resume validation: a checkpoint can't silently replay the wrong run
+# ---------------------------------------------------------------------------
+
+@pytest.mark.smoke
+def test_resume_rejects_mismatched_run(setup, tmp_path):
+    cfg, train, evald = setup
+    hp = _hp()
+    key = jax.random.PRNGKey(0)
+    d = str(tmp_path / "state")
+    run_federated(key, cfg, train, evald, strategy="fednano", rounds=1,
+                  hp=hp, checkpoint_dir=d, final_eval=False)
+
+    with pytest.raises(CheckpointError, match="strategy"):
+        run_federated(key, cfg, train, evald, strategy="fedavg", rounds=2,
+                      hp=hp, resume=d)
+    with pytest.raises(CheckpointError, match="engine"):
+        run_federated(key, cfg, train, evald, strategy="fednano", rounds=2,
+                      hp=hp, engine="vmap", resume=d)
+    with pytest.raises(CheckpointError, match="hyperparameters"):
+        run_federated(key, cfg, train, evald, strategy="fednano", rounds=2,
+                      hp=_hp(lr=1e-2), resume=d)
+    with pytest.raises(CheckpointError, match="transform chain"):
+        run_federated(key, cfg, train, evald, strategy="fednano", rounds=2,
+                      hp=hp, transforms=(Int8EFQuant(),), resume=d)
+    with pytest.raises(CheckpointError, match="PRNG key"):
+        run_federated(jax.random.PRNGKey(1), cfg, train, evald,
+                      strategy="fednano", rounds=2, hp=hp, resume=d)

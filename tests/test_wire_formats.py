@@ -1,0 +1,214 @@
+"""Wire-format contract: self-describing payloads, exact byte accounting.
+
+Every upload codec produces a ``WireMessage`` stamped ``(codec, version)``;
+``decode_wire`` dispatches on the stamp and refuses anything it doesn't
+speak. Two invariants are pinned here:
+
+  1. roundtrip: decode(encode(θ)) reproduces the θ the server should see,
+     with shapes and dtypes preserved — for any tree shape (property tests);
+  2. accounting: the bytes CommLog records as ``param_up_wire`` equal
+     ``msg.nbytes`` of the message that actually crossed, both at the
+     transform level and end-to-end through ``run_federated``.
+
+Property tests use hypothesis when available and skip cleanly otherwise.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # property tests skip, unit tests still run
+    from _hypothesis_stub import given, settings, st
+
+from repro.strategies.transforms import (
+    WIRE_FORMAT_VERSION,
+    ClipNoiseDP,
+    Int8EFQuant,
+    TopKSparsify,
+    TransformCtx,
+    UpdateTransform,
+    WireMessage,
+    decode_wire,
+)
+from repro.utils import tree_allclose, tree_bytes, tree_sub
+
+CTX = TransformCtx(cid=0, round_idx=0)
+
+
+def _tree(shapes, scale=1.0, seed=0):
+    """Deterministic float32 tree with one leaf per shape."""
+    rng = np.random.RandomState(seed)
+    return {f"leaf{i}": jnp.asarray(rng.randn(*s).astype(np.float32) * scale)
+            for i, s in enumerate(shapes)}
+
+
+# ---------------------------------------------------------------------------
+# stamps: version and codec are enforced, not advisory
+# ---------------------------------------------------------------------------
+
+@pytest.mark.smoke
+def test_identity_encode_stamps_version():
+    theta = _tree([(3, 4)])
+    msg, _ = UpdateTransform().encode(CTX, theta, theta, None)
+    assert msg.codec == "identity"
+    assert msg.version == WIRE_FORMAT_VERSION
+    assert msg.nbytes == tree_bytes(theta)
+    assert tree_allclose(decode_wire(msg, theta), theta)
+
+
+@pytest.mark.smoke
+def test_decode_rejects_wrong_version():
+    theta = _tree([(2, 2)])
+    msg, _ = UpdateTransform().encode(CTX, theta, theta, None)
+    with pytest.raises(ValueError, match="refusing to decode"):
+        decode_wire(msg._replace(version=99), theta)
+
+
+@pytest.mark.smoke
+def test_decode_rejects_unknown_codec():
+    theta = _tree([(2, 2)])
+    with pytest.raises(ValueError, match="unknown wire codec"):
+        decode_wire(WireMessage("gzip9", WIRE_FORMAT_VERSION, theta, 1), theta)
+
+
+# ---------------------------------------------------------------------------
+# roundtrips: unit cases for each codec
+# ---------------------------------------------------------------------------
+
+def test_int8_roundtrip_within_quantization_error():
+    g = _tree([(4, 8), (16,)], seed=1)
+    theta = jax.tree.map(lambda x: x + 0.05, g)
+    t = Int8EFQuant()
+    msg, err = t.encode(CTX, theta, g, None)
+    assert msg.codec == "int8_ef"
+    back = decode_wire(msg, g)
+    # int8 over a ±max-scale grid: per-leaf error ≤ scale = max|delta|/127
+    for k in g:
+        d = np.abs(np.asarray(back[k]) - np.asarray(theta[k]))
+        bound = np.abs(np.asarray(theta[k] - g[k])).max() / 127 + 1e-7
+        assert d.max() <= bound
+        assert back[k].dtype == theta[k].dtype
+        assert back[k].shape == theta[k].shape
+    # 1 byte per element + fp32 scale per leaf
+    n_leaves = len(jax.tree.leaves(g))
+    n_elems = sum(x.size for x in jax.tree.leaves(g))
+    assert msg.nbytes == n_elems + 4 * n_leaves
+
+
+def test_topk_roundtrip_keeps_exactly_k():
+    g = _tree([(6, 6)], seed=2)
+    theta = jax.tree.map(lambda x: x + 0.1, g)
+    t = TopKSparsify(frac=0.25)
+    msg, err = t.encode(CTX, theta, g, None)
+    back = decode_wire(msg, g)
+    k = max(1, int(round(0.25 * 36)))
+    nz = int(np.count_nonzero(np.asarray(tree_sub(back, g)["leaf0"])))
+    assert nz <= k  # ≤: a kept entry can legitimately be zero
+    assert msg.nbytes == k * (4 + 4)
+    assert back["leaf0"].shape == theta["leaf0"].shape
+    assert back["leaf0"].dtype == theta["leaf0"].dtype
+    # error feedback holds exactly what the wire dropped
+    assert tree_allclose(jax.tree.map(jnp.add, tree_sub(back, g), err),
+                         tree_sub(theta, g), atol=1e-6)
+
+
+def test_dp_noiseless_is_clip_only():
+    g = _tree([(3, 3)], seed=3)
+    theta = jax.tree.map(lambda x: x + 1e-3, g)
+    t = ClipNoiseDP(clip_norm=100.0, noise_mult=0.0)
+    msg, _ = t.encode(CTX, theta, g, None)
+    assert msg.codec == "dp_fp32"
+    assert msg.nbytes == tree_bytes(theta)
+    assert tree_allclose(decode_wire(msg, g), theta, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# roundtrips: property tests over arbitrary tree shapes
+# ---------------------------------------------------------------------------
+
+shape_lists = st.lists(
+    st.tuples(st.integers(1, 5), st.integers(1, 5)), min_size=1, max_size=4)
+
+
+@given(shapes=shape_lists, seed=st.integers(0, 2**16))
+@settings(max_examples=25, deadline=None)
+def test_identity_roundtrip_any_shape(shapes, seed):
+    theta = _tree(shapes, seed=seed)
+    msg, _ = UpdateTransform().encode(CTX, theta, theta, None)
+    back = decode_wire(msg, theta)
+    assert tree_allclose(back, theta)
+    assert msg.nbytes == tree_bytes(theta)
+
+
+@given(shapes=shape_lists, seed=st.integers(0, 2**16))
+@settings(max_examples=25, deadline=None)
+def test_int8_shape_dtype_preserved_any_shape(shapes, seed):
+    g = _tree(shapes, seed=seed)
+    theta = jax.tree.map(lambda x: x * 1.01 + 0.01, g)
+    msg, _ = Int8EFQuant().encode(CTX, theta, g, None)
+    back = decode_wire(msg, g)
+    for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(theta)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+    n_leaves = len(jax.tree.leaves(g))
+    n_elems = sum(x.size for x in jax.tree.leaves(g))
+    assert msg.nbytes == n_elems + 4 * n_leaves
+
+
+@given(shapes=shape_lists, seed=st.integers(0, 2**16),
+       frac=st.floats(0.05, 1.0))
+@settings(max_examples=25, deadline=None)
+def test_topk_wire_bytes_exact_any_shape(shapes, seed, frac):
+    g = _tree(shapes, seed=seed)
+    theta = jax.tree.map(lambda x: x + 0.5, g)
+    msg, _ = TopKSparsify(frac=frac).encode(CTX, theta, g, None)
+    want = sum(max(1, int(round(frac * x.size))) * (x.dtype.itemsize + 4)
+               for x in jax.tree.leaves(g))
+    assert msg.nbytes == want
+    back = decode_wire(msg, g)
+    for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(theta)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: CommLog's param_up_wire is the encoded size, exactly
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def run_setup():
+    from repro.configs import get_smoke_config
+    from repro.data import make_federated_data
+
+    cfg = get_smoke_config("llava-1.5-7b").with_(
+        n_layers=1, d_model=32, n_heads=2, n_kv_heads=2, head_dim=16,
+        d_ff=64, frontend_dim=16,
+    )
+    train, evald, _ = make_federated_data(
+        cfg, n_clients=2, examples_per_client=8, alpha=100.0, batch_size=2,
+        seq_len=8,
+    )
+    return cfg, train, evald
+
+
+@pytest.mark.parametrize("engine", ["sequential", "vmap", "buffered"])
+def test_engine_wire_accounting_matches_encoding(run_setup, engine):
+    from repro.core import HyperParams, run_federated
+
+    cfg, train, evald = run_setup
+    rounds = 2
+    res = run_federated(
+        jax.random.PRNGKey(0), cfg, train, evald, strategy="fedavg",
+        rounds=rounds, hp=HyperParams(lr=5e-3, local_steps=1),
+        transforms=(Int8EFQuant(),), engine=engine,
+        buffer_size=len(train) if engine == "buffered" else None,
+        final_eval=False,
+    )
+    g = res.server.global_adapters
+    n_leaves = len(jax.tree.leaves(g))
+    n_elems = sum(x.size for x in jax.tree.leaves(g))
+    per_upload = n_elems + 4 * n_leaves
+    n_uploads = sum(m["participants"] for m in res.round_metrics)
+    assert res.comm_totals["param_up_wire"] == per_upload * n_uploads
+    # and dense accounting is untouched by the wire codec
+    assert res.comm_totals["param_up"] == tree_bytes(g) * n_uploads
