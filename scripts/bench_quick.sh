@@ -1,8 +1,10 @@
 #!/usr/bin/env bash
-# Wiring check for the round-engine benchmark: tiny cohorts, no JSON output.
-# Part of scripts/smoke.sh; run the full sweep with
+# Wiring checks for the benchmarks: tiny workloads, no JSON output.
+# Part of scripts/smoke.sh; run the full sweeps with
 #   PYTHONPATH=src python benchmarks/engine_bench.py
+#   PYTHONPATH=src python benchmarks/serve_bench.py
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-exec python benchmarks/engine_bench.py --quick "$@"
+python benchmarks/engine_bench.py --quick "$@"
+python benchmarks/serve_bench.py --quick

@@ -24,4 +24,10 @@ for ra, rb in zip(a["rounds"], b["rounds"]):
     assert abs(ra["mean_loss"] - rb["mean_loss"]) < 1e-6, (ra, rb)
 print("resume smoke OK: first rounds replayed within 1e-6")
 EOF
+
+# multi-tenant serving: 2 tenants, distinct adapters, engine must match the
+# naive one-request-at-a-time loop token-for-token (exits nonzero otherwise)
+python -m repro.launch.serve --arch h2o-danube-1.8b --tenants 2 \
+    --requests 6 --gen-tokens 4 --prefill-len 8 --slots 2 --naive \
+    | tail -2
 scripts/bench_quick.sh

@@ -127,6 +127,26 @@ def load_pytree(path: str, reference, *, strict: bool = True):
     return restored
 
 
+def load_adapters(path: str, reference):
+    """Restore a NanoAdapter pytree for serving/hot-swap.
+
+    ``path`` is either a bare ``.npz`` written by :func:`save_pytree`, or a
+    :func:`save_server_checkpoint` directory — in that case only
+    ``global_adapters.npz`` is read (the serving engine never needs the
+    backbone copy: it is frozen and shared across tenants by construction).
+    """
+    if os.path.isdir(path):
+        inner = os.path.join(path, "global_adapters.npz")
+        if not os.path.exists(inner):
+            raise CheckpointError(
+                f"{path!r} is a directory without global_adapters.npz — not "
+                "a server checkpoint")
+        return load_pytree(inner, reference)
+    if not os.path.exists(path):
+        raise CheckpointError(f"no adapter checkpoint at {path!r}")
+    return load_pytree(path, reference)
+
+
 def _key_data(key) -> Optional[np.ndarray]:
     """Raw uint32 data of a PRNG key (old-style arrays pass through)."""
     if key is None:

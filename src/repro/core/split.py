@@ -118,8 +118,22 @@ def split_train_grads(cfg, backbone, adapters, batch: Batch):
     return loss, adapter_grads, traffic
 
 
-def split_activation_bytes_per_step(cfg, batch_size: int, seq_len: int) -> dict:
-    """Analytic per-step activation traffic (both directions), bytes."""
+def split_activation_bytes_per_step(cfg, batch_size: int, seq_len: int,
+                                    n_patches: int = None) -> dict:
+    """Analytic per-step activation traffic (both directions), bytes.
+
+    Matches the measured ``split_train_grads`` traffic exactly: the wire
+    carries the text-token embeddings (B, S, D) PLUS — for any arch with a
+    modality frontend — the connected encoder stream (B, M, D), whether it is
+    concatenated into the decoder sequence (vlm) or shipped as a separate
+    cross-attention memory (audio). ``n_patches`` overrides the per-clip
+    patch/frame count (pass 0 for text-only batches on a multimodal arch);
+    default is the arch's :func:`~repro.models.vision_stub.num_patches`.
+    """
+    from repro.models.vision_stub import num_patches
+
+    if n_patches is None:
+        n_patches = num_patches(cfg) if cfg.frontend_dim else 0
     itemsize = jnp.dtype(cfg.dtype).itemsize
-    act = batch_size * seq_len * cfg.d_model * itemsize
+    act = batch_size * (seq_len + n_patches) * cfg.d_model * itemsize
     return {"act_up": act, "act_down": act}

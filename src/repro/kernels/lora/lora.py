@@ -11,6 +11,11 @@ Why a kernel at all: at rank 64 the adapter matmuls are heavily
 memory-bound (arithmetic intensity ≈ r ≈ 64 FLOP/B vs the MXU's ~240
 FLOP/B break-even at bf16); the win is avoiding a second HBM pass over x
 and the (T, r) intermediate, not FLOPs.
+
+The grouped variant (``grouped_lora_residual_2d``) is the multi-tenant
+serving form: every row carries an adapter index into a stacked
+(N, D, r)/(N, r, D) bank, so one kernel launch serves a mixed-tenant batch
+(S-LoRA / punica idiom; repro.serving builds its decode step on it).
 """
 from __future__ import annotations
 
@@ -53,4 +58,71 @@ def lora_residual_2d(x, down, up, *, scale: float, block_t: int = 256, interpret
         out_shape=jax.ShapeDtypeStruct((Tp, D), x.dtype),
         interpret=interpret,
     )(x, down, up)
+    return out[:T] if pad else out
+
+
+# ---------------------------------------------------------------------------
+# grouped (multi-tenant) variant — S-LoRA / punica idiom
+# ---------------------------------------------------------------------------
+#
+# y[t] = x[t] + scale·(x[t]·A[idx[t]])·B[idx[t]] against a stacked adapter
+# bank A (N, D, r) / B (N, r, D). Grid is (token blocks × adapters); the
+# output block is revisited across the adapter axis (innermost, sequential on
+# TPU) so it stays VMEM-resident: step n adds the contribution of adapter n
+# to the rows that selected it, everything else contributes exact zeros
+# (zeroed rows through two matmuls stay exactly zero, so mixed-tenant blocks
+# match the per-tenant kernel bit-for-bit in f32). Blocks where no row uses
+# adapter n skip both matmuls via pl.when — with tenant-sorted traffic each
+# block pays for the adapters it actually touches, not the whole bank.
+
+def _grouped_kernel(idx_ref, x_ref, a_ref, b_ref, o_ref, *, scale: float):
+    n = pl.program_id(1)
+
+    @pl.when(n == 0)
+    def _init():
+        o_ref[...] = x_ref[...]
+
+    sel = idx_ref[...] == n                      # (bt, 1)
+
+    @pl.when(jnp.any(sel))
+    def _accumulate():
+        x = x_ref[...].astype(jnp.float32)       # (bt, D)
+        xm = jnp.where(sel, x, 0.0)
+        a = a_ref[0].astype(jnp.float32)         # (D, r)
+        b = b_ref[0].astype(jnp.float32)         # (r, D)
+        h = jnp.dot(xm, a, preferred_element_type=jnp.float32)
+        y = jnp.dot(h, b, preferred_element_type=jnp.float32)
+        o_ref[...] = o_ref[...] + (scale * y).astype(o_ref.dtype)
+
+
+def grouped_lora_residual_2d(x, down, up, idx, *, scale: float,
+                             block_t: int = 256, interpret: bool = False):
+    """x (T, D), idx (T,) int32 rows into down (N, D, r) / up (N, r, D).
+
+    idx < 0 means "no adapter" — the row passes through untouched (the
+    identity slot of a serving bank). Padding rows use the same convention.
+    """
+    T, D = x.shape
+    N, _, r = down.shape
+    bt = min(block_t, T)
+    pad = (-T) % bt
+    idx2 = idx.astype(jnp.int32).reshape(T, 1)
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+        idx2 = jnp.pad(idx2, ((0, pad), (0, 0)), constant_values=-1)
+    Tp = x.shape[0]
+
+    out = pl.pallas_call(
+        functools.partial(_grouped_kernel, scale=scale),
+        grid=(Tp // bt, N),
+        in_specs=[
+            pl.BlockSpec((bt, 1), lambda i, n: (i, 0)),
+            pl.BlockSpec((bt, D), lambda i, n: (i, 0)),
+            pl.BlockSpec((1, D, r), lambda i, n: (n, 0, 0)),
+            pl.BlockSpec((1, r, D), lambda i, n: (n, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, D), lambda i, n: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Tp, D), x.dtype),
+        interpret=interpret,
+    )(idx2, x, down, up)
     return out[:T] if pad else out

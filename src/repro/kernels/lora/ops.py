@@ -5,7 +5,7 @@ import functools
 
 import jax
 
-from repro.kernels.lora.lora import lora_residual_2d
+from repro.kernels.lora.lora import grouped_lora_residual_2d, lora_residual_2d
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "block_t", "interpret"))
@@ -15,4 +15,21 @@ def lora_residual(x, down, up, *, scale: float, block_t: int = 256, interpret: b
     d = x.shape[-1]
     flat = x.reshape(-1, d)
     out = lora_residual_2d(flat, down, up, scale=scale, block_t=block_t, interpret=interpret)
+    return out.reshape(*lead, d)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_t", "interpret"))
+def grouped_lora_residual(x, down, up, idx, *, scale: float, block_t: int = 256,
+                          interpret: bool = False):
+    """Multi-tenant LoRA: per-row adapter ids into a stacked bank.
+
+    x (..., D); down (N, D, r); up (N, r, D); idx (...) int32 aligned with
+    x's leading shape (idx < 0 = identity row).
+    """
+    lead = x.shape[:-1]
+    d = x.shape[-1]
+    flat = x.reshape(-1, d)
+    fidx = idx.reshape(-1)
+    out = grouped_lora_residual_2d(flat, down, up, fidx, scale=scale,
+                                   block_t=block_t, interpret=interpret)
     return out.reshape(*lead, d)

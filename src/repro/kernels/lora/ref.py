@@ -12,3 +12,19 @@ def lora_residual(x, down, up, *, scale: float):
     h = x.astype(jnp.float32) @ down.astype(jnp.float32)
     y = h @ up.astype(jnp.float32)
     return (x.astype(jnp.float32) + scale * y).astype(x.dtype)
+
+
+def grouped_lora_residual(x, down, up, idx, *, scale: float):
+    """Per-row adapter selection against a stacked bank (serving oracle).
+
+    x (..., D); down (N, D, r); up (N, r, D); idx (...) int32 — the adapter
+    id of each row. idx < 0 leaves the row untouched (identity adapter).
+    """
+    n = down.shape[0]
+    safe = jnp.clip(idx, 0, n - 1)
+    a = jnp.take(down, safe, axis=0).astype(jnp.float32)   # (..., D, r)
+    b = jnp.take(up, safe, axis=0).astype(jnp.float32)     # (..., r, D)
+    h = jnp.einsum("...d,...dr->...r", x.astype(jnp.float32), a)
+    y = jnp.einsum("...r,...rd->...d", h, b)
+    y = jnp.where((idx >= 0)[..., None], y, 0.0)
+    return (x.astype(jnp.float32) + scale * y).astype(x.dtype)

@@ -1,10 +1,19 @@
-"""Split-serving driver (``python -m repro.launch.serve``).
+"""Multi-tenant serving driver (``python -m repro.launch.serve``).
 
-Serves batched VQA requests through the FedNano split: client-side NanoEdge
-(embed + connect + adapt) feeding the server-hosted frozen backbone's
-prefill + greedy decode loop. Loads tuned adapters from a checkpoint
-directory if given (produced by repro.launch.train), else serves with
-freshly-initialized (identity) adapters.
+The deployment half of FedNano: ONE frozen backbone serves many tenants,
+each tenant being a federated client whose tuned NanoAdapters are
+hot-swapped into the engine's adapter bank. Requests from different
+tenants with different prompt lengths are continuously batched — admission
+prefills into a free decode slot, then every engine step decodes all
+occupied slots in one fixed-shape jitted call with per-row grouped-LoRA
+adapter selection, so mixed traffic never recompiles.
+
+Adapters come from ``--ckpt-root`` (a directory of per-tenant federated
+checkpoints: ``<root>/<tenant>`` as a ``save_server_checkpoint`` dir or a
+bare ``.npz``) or, without one, are synthesized per tenant so the
+multi-tenant path is exercisable standalone. ``--naive`` cross-checks the
+engine against the one-request-at-a-time loop (the pre-engine serving
+path) and reports token parity + speedup.
 
 On a real deployment the same prefill/decode step functions lower onto the
 production mesh (repro.launch.dryrun proves decode_32k/long_500k for every
@@ -16,75 +25,126 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_smoke_config, list_archs
 from repro.core import adapters as nano
-from repro.data import SyntheticVQA, examples_to_batches
 from repro.models import model as backbone_lib
+from repro.models.vision_stub import num_patches
+from repro.serving import (
+    Request,
+    ServingEngine,
+    checkpoint_adapter_loader,
+    generate_naive,
+)
+
+
+def synth_tenant_adapters(key, cfg, tenants):
+    """Deterministic non-identity adapter sets, one per tenant name."""
+    out = {}
+    for i, t in enumerate(tenants):
+        ad = nano.init_nanoedge(jax.random.fold_in(key, 100 + i), cfg)
+        ad = jax.tree.map(
+            lambda a, j=i: jax.random.normal(
+                jax.random.fold_in(key, 1000 + j * 7 + a.size % 97),
+                a.shape, a.dtype) * 0.05,
+            ad)
+        out[t] = ad
+    return out
+
+
+def make_requests(cfg, tenants, n_requests, prefill_len, gen_tokens, seed):
+    """Mixed workload: tenants round-robin (every 5th request tenantless),
+    prompt lengths cycling through [2, prefill_len]."""
+    rng = np.random.default_rng(seed)
+    m = num_patches(cfg) if cfg.frontend_dim else 0
+    reqs = []
+    for i in range(n_requests):
+        tenant = None if (i % 5 == 4) else tenants[i % len(tenants)]
+        length = 2 + (i * 3) % (prefill_len - 1)
+        patches = (rng.standard_normal((m, cfg.frontend_dim)).astype(np.float32)
+                   if cfg.frontend_dim else None)
+        reqs.append(Request(
+            rid=i, tenant=tenant,
+            prompt=rng.integers(0, cfg.vocab_size, length).astype(np.int32),
+            patches=patches, max_new_tokens=gen_tokens))
+    return reqs
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="llava-1.5-7b", choices=list_archs())
-    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--tenants", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--gen-tokens", type=int, default=8)
-    ap.add_argument("--ckpt", default=None, help="server checkpoint dir (adapters)")
+    ap.add_argument("--prefill-len", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4,
+                    help="concurrent decode slots (page pool size)")
+    ap.add_argument("--adapter-slots", type=int, default=8,
+                    help="adapter bank size (LRU over tenants)")
+    ap.add_argument("--ckpt-root", default=None,
+                    help="directory of per-tenant federated checkpoints; "
+                         "tenant names are the entries inside")
+    ap.add_argument("--pallas-grouped", action="store_true",
+                    help="run the grouped-LoRA Pallas kernel (interpret "
+                         "mode on CPU) instead of the jnp reference")
+    ap.add_argument("--naive", action="store_true",
+                    help="also run the one-request-at-a-time loop, check "
+                         "token parity, and report the speedup")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     key = jax.random.PRNGKey(args.seed)
     cfg = get_smoke_config(args.arch)
     backbone = backbone_lib.init_backbone(key, cfg)
-    adapters = nano.init_nanoedge(jax.random.fold_in(key, 1), cfg)
-    if args.ckpt:
-        from repro.checkpoint import load_pytree
+
+    if args.ckpt_root:
         import os
 
-        backbone = load_pytree(os.path.join(args.ckpt, "backbone.npz"), backbone)
-        adapters = load_pytree(os.path.join(args.ckpt, "global_adapters.npz"), adapters)
-        print(f"loaded adapters + backbone from {args.ckpt}")
+        tenant_names = sorted(
+            os.path.splitext(e)[0] for e in os.listdir(args.ckpt_root))
+        if not tenant_names:
+            raise SystemExit(f"--ckpt-root {args.ckpt_root!r} is empty")
+        tenant_names = tenant_names[: args.tenants]
+        loader = checkpoint_adapter_loader(cfg, args.ckpt_root)
+        adapters_by_tenant = {t: loader(t) for t in tenant_names}
+        print(f"serving {len(tenant_names)} tenants from {args.ckpt_root}")
+    else:
+        tenant_names = [f"tenant{i}" for i in range(args.tenants)]
+        adapters_by_tenant = synth_tenant_adapters(key, cfg, tenant_names)
+        loader = adapters_by_tenant.__getitem__
+        print(f"serving {len(tenant_names)} synthetic tenants "
+              "(no --ckpt-root)")
 
-    gen = SyntheticVQA(
-        vocab_size=cfg.vocab_size, seq_len=24,
-        frontend_dim=cfg.frontend_dim,
-        n_patches=(cfg.enc_seq_len if cfg.family == "audio"
-                   else (8 if cfg.frontend_dim else 0)) or 8,
-    )
-    batch = examples_to_batches(gen.generate(args.batch, seed=args.seed), args.batch)[0]
-
-    embeds, positions, _, _, enc = nano.nanoedge_forward(cfg, backbone, adapters, batch)
-    capacity = embeds.shape[1] + args.gen_tokens + 1
-
-    @jax.jit
-    def prefill(embeds, positions, enc):
-        state, hidden = backbone_lib.prefill(cfg, backbone, embeds, positions,
-                                             capacity, enc_embeds=enc)
-        return state, backbone_lib.logits(cfg, backbone, hidden[:, -1:, :])
-
-    @jax.jit
-    def decode(state, emb, pos):
-        return backbone_lib.decode_step(cfg, backbone, emb, state, pos)
+    reqs = make_requests(cfg, tenant_names, args.requests, args.prefill_len,
+                         args.gen_tokens, args.seed)
+    engine = ServingEngine(
+        cfg, backbone, max_slots=args.slots, prefill_len=args.prefill_len,
+        max_new_tokens=args.gen_tokens, adapter_slots=args.adapter_slots,
+        adapter_loader=loader, use_pallas_grouped=args.pallas_grouped)
 
     t0 = time.time()
-    state, last = prefill(embeds, positions, enc)
-    tok = jnp.argmax(last[:, 0], axis=-1)
-    out = [tok]
-    kw = dict(rank=cfg.adapter.rank, alpha=cfg.adapter.alpha)
-    for step in range(args.gen_tokens - 1):
-        pos = jnp.int32(embeds.shape[1] + step)
-        emb = backbone_lib.embed_tokens(cfg, backbone, tok[:, None])
-        if "text" in adapters:
-            emb = nano.nano_adapter_apply(adapters["text"], emb, **kw)
-        lg, state = decode(state, emb, pos)
-        tok = jnp.argmax(lg[:, 0], axis=-1)
-        out.append(tok)
-    toks = jnp.stack(out, axis=1)
+    done = engine.run(reqs)
     dt = time.time() - t0
-    print(f"arch={args.arch} served {args.batch} requests × {args.gen_tokens} tokens "
-          f"in {dt:.2f}s ({args.batch*args.gen_tokens/dt:.1f} tok/s on 1 CPU core)")
-    for i in range(min(args.batch, 4)):
-        print(f"  req {i}: {[int(t) for t in toks[i]]}")
+    n_tok = sum(len(c.tokens) for c in done.values())
+    print(f"arch={args.arch} engine: {len(reqs)} requests, {n_tok} tokens "
+          f"in {dt:.2f}s ({n_tok / dt:.1f} tok/s on 1 CPU core) | "
+          f"occupancy {engine.mean_occupancy():.2f}/{args.slots} | "
+          f"adapter cache {engine.cache.stats()}")
+    for rid in sorted(done)[:4]:
+        c = done[rid]
+        print(f"  req {rid} [{c.tenant or 'base'}]: {c.tokens}")
+
+    if args.naive:
+        t0 = time.time()
+        ref = generate_naive(cfg, backbone, reqs, adapters_by_tenant)
+        dt_naive = time.time() - t0
+        mismatch = [r.rid for r in reqs if done[r.rid].tokens != ref[r.rid].tokens]
+        if mismatch:
+            raise SystemExit(f"TOKEN MISMATCH vs naive loop: rids {mismatch}")
+        print(f"naive loop: {n_tok} tokens in {dt_naive:.2f}s "
+              f"({n_tok / dt_naive:.1f} tok/s) — token parity OK, "
+              f"engine speedup {dt_naive / dt:.2f}x")
     return 0
 
 

@@ -126,15 +126,23 @@ def loss_fn(cfg, params, embeds, positions, labels, mask, enc_embeds=None):
     return lm_loss(lg, labels, mask), aux
 
 
-def prefill(cfg, params, embeds, positions, capacity: int, enc_embeds=None):
-    """Returns (state, hidden) — state is the stacked decode state."""
+def prefill(cfg, params, embeds, positions, capacity: int, enc_embeds=None,
+            length=None):
+    """Returns (state, hidden) — state is the stacked decode state.
+
+    ``length`` (scalar int32, optional): number of real positions when the
+    sequence is right-padded; only recurrent families consume it (their
+    terminal state must not integrate pad steps). Attention/enc-dec caches
+    are position-masked and ignore it.
+    """
     x = _add_learned_pos(cfg, params, embeds, positions if positions.ndim == 2 else positions[0])
     angles = make_angles(cfg, positions)
     if cfg.family == "audio":
         memory = _encode_memory(cfg, params, enc_embeds)
         x, state = encdec.dec_prefill(cfg, params, x, memory, capacity)
     else:
-        x, state = transformer.prefill_stack(cfg, params, x, angles, capacity)
+        x, state = transformer.prefill_stack(cfg, params, x, angles, capacity,
+                                             length=length)
     return state, norm(cfg, params["final_norm"], x)
 
 

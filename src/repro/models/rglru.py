@@ -78,9 +78,20 @@ def _gates(params, x):
     return a, beta * i * xf
 
 
-def rglru_scan(params, x):
-    """Full-sequence RG-LRU via associative scan. x (B, S, dr) -> (B, S, dr)."""
+def rglru_scan(params, x, length=None):
+    """Full-sequence RG-LRU via associative scan. x (B, S, dr) -> (B, S, dr).
+
+    ``length`` (scalar int32, optional) forces the gates to the scan's
+    identity element ``(a=1, b=0)`` past the valid prefix, so pad steps carry
+    the hidden state through unchanged — the serving engine's right-padded
+    prefill hinges on this.
+    """
     a, b = _gates(params, x)  # both (B, S, dr) f32
+    if length is not None:
+        valid = (jnp.arange(x.shape[1]) < jnp.asarray(length, jnp.int32))
+        valid = valid[None, :, None]
+        a = jnp.where(valid, a, 1.0)
+        b = jnp.where(valid, b, 0.0)
 
     def combine(c1, c2):
         a1, b1 = c1
@@ -110,15 +121,30 @@ def init_rglru_state(cfg, batch: int, dtype) -> RGLRUState:
     )
 
 
-def rglru_block_prefill(cfg, params, u):
-    """Full block + terminal RGLRUState for decode."""
+def rglru_block_prefill(cfg, params, u, length=None):
+    """Full block + terminal RGLRUState for decode.
+
+    With ``length`` set, gate masking in :func:`rglru_scan` makes pad steps
+    identity, so ``hh[:, -1]`` IS the state after the last valid token; the
+    conv window is sliced at the valid length (zero-extended on the left,
+    matching the causal-conv boundary).
+    """
     gate = jax.nn.gelu((u @ params["w_gate_branch"]).astype(jnp.float32)).astype(u.dtype)
     pre_conv = u @ params["w_rec_branch"]
     rec_in = _causal_conv(params, pre_conv)
-    h, (_, hh) = rglru_scan(params, rec_in)
+    h, (_, hh) = rglru_scan(params, rec_in, length=length)
     y = (h * gate) @ params["w_out"]
     cw = cfg.rglru.conv_width
-    state = RGLRUState(conv=pre_conv[:, -(cw - 1) :, :], h=hh[:, -1].astype(jnp.float32))
+    # zero-left-extend so prompts shorter than cw-1 still give a full window
+    zext = jnp.concatenate(
+        [jnp.zeros((u.shape[0], cw - 1, pre_conv.shape[-1]),
+                   pre_conv.dtype), pre_conv], axis=1)
+    if length is None:
+        conv_tail = zext[:, -(cw - 1) :, :]
+    else:
+        conv_tail = jax.lax.dynamic_slice_in_dim(
+            zext, jnp.asarray(length, jnp.int32), cw - 1, axis=1)
+    state = RGLRUState(conv=conv_tail, h=hh[:, -1].astype(jnp.float32))
     return y, state
 
 

@@ -124,19 +124,41 @@ def init_ssm_state(cfg, batch: int, dtype) -> SSMState:
     )
 
 
-def ssm_prefill(cfg, params, u):
-    """Run full sequence AND return the terminal SSMState for decoding."""
+def ssm_prefill(cfg, params, u, length=None):
+    """Run full sequence AND return the terminal SSMState for decoding.
+
+    ``length`` (scalar int32, optional) marks only the first ``length``
+    positions as real: ``dt`` is zeroed on the tail, which makes the decay
+    ``exp(0·A) = 1`` and the input contribution ``0·x = 0`` — pad steps pass
+    the recurrent state through *exactly*, so the terminal state equals the
+    unpadded run's bit-for-bit (the chunked machinery already relies on this
+    identity for its internal chunk padding). The conv tail is sliced at the
+    valid length. Serving uses this to prefill right-padded prompts without
+    contaminating the SSM state.
+    """
     s = cfg.ssm
     B_, S, D = u.shape
     d_inner, H, conv_dim = _dims(cfg)
     zxbcdt = u @ params["in_proj"]
     z, xBC, dt = _split_proj(cfg, zxbcdt)
-    conv_tail = xBC[:, -(s.d_conv - 1) :, :]
+    # last (d_conv-1) *valid* inputs; the window before t=0 is zero by the
+    # causal-conv convention, so left-extend with zeros — this also keeps
+    # prompts shorter than d_conv-1 from yielding a truncated conv window
+    zext = jnp.concatenate(
+        [jnp.zeros((B_, s.d_conv - 1, conv_dim), xBC.dtype), xBC], axis=1)
+    if length is None:
+        conv_tail = zext[:, -(s.d_conv - 1) :, :]
+    else:
+        conv_tail = jax.lax.dynamic_slice_in_dim(
+            zext, jnp.asarray(length, jnp.int32), s.d_conv - 1, axis=1)
     xBCc = jax.nn.silu(_causal_conv(params, xBC, cfg))
     x = xBCc[..., :d_inner].reshape(B_, S, H, s.head_dim)
     Bm = xBCc[..., d_inner : d_inner + s.d_state]
     Cm = xBCc[..., d_inner + s.d_state :]
     dtp = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    if length is not None:
+        valid = jnp.arange(S) < jnp.asarray(length, jnp.int32)
+        dtp = jnp.where(valid[None, :, None], dtp, 0.0)
     A = -jnp.exp(params["A_log"])
     y = ssd_ref.ssd_chunked(x, dtp.astype(x.dtype), A, Bm, Cm, chunk=s.chunk_size)
     y = y + x * params["D"][:, None].astype(x.dtype)

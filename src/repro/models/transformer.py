@@ -280,17 +280,17 @@ def _attn_prefill(cfg, lp, x, angles, capacity: int):
     return x, cache
 
 
-def _rec_prefill(cfg, lp, x, angles):
+def _rec_prefill(cfg, lp, x, angles, length=None):
     h = norm(cfg, lp["norm1"], x)
-    out, state = rglru_lib.rglru_block_prefill(cfg, lp["rgl"], h)
+    out, state = rglru_lib.rglru_block_prefill(cfg, lp["rgl"], h, length=length)
     x = x + out
     x = x + mlp(cfg, lp["mlp"], norm(cfg, lp["norm2"], x))
     return x, state
 
 
-def _ssm_prefill(cfg, lp, x):
+def _ssm_prefill(cfg, lp, x, length=None):
     h = norm(cfg, lp["norm1"], x)
-    out, state = ssm_lib.ssm_prefill(cfg, lp["ssm"], h)
+    out, state = ssm_lib.ssm_prefill(cfg, lp["ssm"], h, length=length)
     return x + out, state
 
 
@@ -305,15 +305,22 @@ def _moe_prefill(cfg, lp, x, angles, capacity: int):
     return x, cache
 
 
-def prefill_stack(cfg, stack, x, angles, capacity: int):
-    """Returns (hidden, stacked decode state)."""
+def prefill_stack(cfg, stack, x, angles, capacity: int, length=None):
+    """Returns (hidden, stacked decode state).
+
+    ``length`` (scalar int32, optional) marks only the first ``length``
+    positions as real — recurrent sub-layers (ssm / rg-lru) gate their state
+    updates so right-padding never leaks into the terminal decode state.
+    Attention caches need no masking: pad KV is position-invalidated and
+    overwritten before it becomes reachable (see serving.engine docstring).
+    """
     if cfg.family == "hybrid":
         acfg = _attn_cfg(cfg)
         acap = attn_lib.cache_capacity(acfg, capacity)
 
         def f(c, lp):
-            c, s0 = _rec_prefill(cfg, lp["rec0"], c, angles)
-            c, s1 = _rec_prefill(cfg, lp["rec1"], c, angles)
+            c, s0 = _rec_prefill(cfg, lp["rec0"], c, angles, length)
+            c, s1 = _rec_prefill(cfg, lp["rec1"], c, angles, length)
             c, kv = _attn_prefill(acfg, lp["attn"], c, angles, acap)
             return c, {"rec0": s0, "rec1": s1, "attn": kv}
 
@@ -321,14 +328,14 @@ def prefill_stack(cfg, stack, x, angles, capacity: int):
         state = {"triples": st_t, "extras": None}
         if stack["extras"] is not None:
             def fe(c, lp):
-                return _rec_prefill(cfg, lp, c, angles)
+                return _rec_prefill(cfg, lp, c, angles, length)
             x, st_e = _scan_emit(fe, x, stack["extras"], cfg.scan_layers)
             state["extras"] = st_e
         return x, state
 
     if cfg.family == "ssm":
         def f(c, lp):
-            return _ssm_prefill(cfg, lp, c)
+            return _ssm_prefill(cfg, lp, c, length)
         x, states = _scan_emit(f, x, stack["layers"], cfg.scan_layers)
         return x, {"layers": states}
 

@@ -1,0 +1,24 @@
+"""Multi-tenant serving: grouped-LoRA adapter bank, paged KV slots,
+continuous batching, adapter hot-swap from federated checkpoints."""
+from repro.serving.adapter_bank import (
+    AdapterBank,
+    AdapterCache,
+    AdapterCacheMiss,
+    checkpoint_adapter_loader,
+    grouped_adapter_apply,
+)
+from repro.serving.engine import Completion, Request, ServingEngine, generate_naive
+from repro.serving.kv_cache import KVSlotManager
+
+__all__ = [
+    "AdapterBank",
+    "AdapterCache",
+    "AdapterCacheMiss",
+    "checkpoint_adapter_loader",
+    "grouped_adapter_apply",
+    "Completion",
+    "Request",
+    "ServingEngine",
+    "generate_naive",
+    "KVSlotManager",
+]

@@ -1,0 +1,75 @@
+"""Slot-paged decode-state pool for the serving engine.
+
+The engine owns ONE fixed-shape decode state for ``n_slots`` concurrent
+requests (the page pool) — for attention archs that is the stacked KV cache
+(L, n_slots, C, n_kv, hd); for SSM/RG-LRU archs the recurrent states; for
+enc-dec both self- and cross-KV. A request occupies exactly one page (slot)
+from admission to completion; prefill writes a freshly computed single-
+request state into its page, finishing frees the page for the next request
+in the queue. Because the pool's shape never changes, the jitted decode step
+is compiled once and mixed-length, mixed-tenant traffic never recompiles.
+
+Per-slot decode positions are tracked host-side: attention validity inside
+``decode_attention`` derives from the position (slot j valid iff j <= pos),
+so a freed page needs no scrubbing — its stale KV is unreachable until a new
+prefill overwrites the page wholesale.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax
+import numpy as np
+
+from repro.models import model as model_lib
+from repro.utils import tree_bytes
+
+
+@jax.jit
+def _write_page(pool, page, slot):
+    """Overwrite pool slot (batch axis 1 of every leaf) with a B=1 state."""
+    return jax.tree.map(
+        lambda p, s: jax.lax.dynamic_update_index_in_dim(
+            p, s[:, 0].astype(p.dtype), slot, axis=1),
+        pool, page)
+
+
+class KVSlotManager:
+    """Fixed pool of decode pages over the model's stacked decode state."""
+
+    def __init__(self, cfg, n_slots: int, capacity: int, dtype):
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.capacity = capacity
+        self.state = model_lib.init_state(cfg, n_slots, capacity, dtype)
+        self._free: List[int] = list(range(n_slots))
+        self.pos = np.zeros((n_slots,), np.int32)  # next decode position
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self) -> Optional[int]:
+        """Claim a free page; None when the pool is saturated."""
+        if not self._free:
+            return None
+        return self._free.pop(0)
+
+    def free(self, slot: int) -> None:
+        if slot in self._free:
+            raise ValueError(f"double free of slot {slot}")
+        self._free.append(slot)
+        self._free.sort()  # deterministic reuse order
+        self.pos[slot] = 0
+
+    def write(self, slot: int, page, start_pos: int) -> None:
+        """Install a single-request prefill state into ``slot``."""
+        self.state = _write_page(self.state, page, slot)
+        self.pos[slot] = start_pos
+
+    def page_bytes(self) -> int:
+        """Bytes of one page — what admitting a request actually costs."""
+        return tree_bytes(self.state) // self.n_slots
+
+    def pool_bytes(self) -> int:
+        return tree_bytes(self.state)

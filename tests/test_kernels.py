@@ -45,6 +45,103 @@ def test_lora_zero_up_is_identity(rng):
     np.testing.assert_allclose(np.asarray(got), np.asarray(x), rtol=1e-6)
 
 
+# T vs block_t coverage for the tiled kernel: exact multiple, ragged tail,
+# single short block, and a tail of exactly one row.
+@pytest.mark.parametrize("t,block_t", [(64, 32), (100, 32), (7, 32), (33, 32), (1, 256)])
+@pytest.mark.parametrize("d,rank", [(32, 4), (128, 64), (8, 8), (64, 1)])
+def test_lora_2d_ragged_tails(t, block_t, d, rank, rng):
+    from repro.kernels.lora.lora import lora_residual_2d
+
+    x = jax.random.normal(rng, (t, d))
+    down = jax.random.normal(jax.random.fold_in(rng, 1), (d, rank)) * 0.05
+    up = jax.random.normal(jax.random.fold_in(rng, 2), (rank, d)) * 0.05
+    got = lora_residual_2d(x, down, up, scale=1.5, block_t=block_t, interpret=True)
+    want = lora_ref.lora_residual(x, down, up, scale=1.5)
+    assert got.shape == (t, d)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# grouped (multi-tenant) lora — the serving-engine kernel
+# ---------------------------------------------------------------------------
+
+def _grouped_case(rng, t, d, rank, n, dtype=jnp.float32):
+    x = jax.random.normal(rng, (t, d), dtype)
+    down = (jax.random.normal(jax.random.fold_in(rng, 1), (n, d, rank)) * 0.05).astype(dtype)
+    up = (jax.random.normal(jax.random.fold_in(rng, 2), (n, rank, d)) * 0.05).astype(dtype)
+    # mixed ids incl. identity rows (-1); small t still sees >= 3 distinct ids
+    idx = jax.random.randint(jax.random.fold_in(rng, 3), (t,), -1, n)
+    return x, down, up, idx
+
+
+def test_grouped_lora_all_archs(rng):
+    """Grouped kernel vs per-row gather oracle at every arch's (D, rank)."""
+    from repro.configs import get_smoke_config, list_archs
+
+    seen = set()
+    for arch in list_archs():
+        cfg = get_smoke_config(arch)
+        key = (cfg.d_model, cfg.adapter.rank)
+        if key in seen:
+            continue
+        seen.add(key)
+        d, rank = key
+        # block_t=8 over t=27 -> ragged tail AND >=3 distinct ids per block
+        x, down, up, idx = _grouped_case(jax.random.fold_in(rng, hash(arch) % 997),
+                                         27, d, rank, 5)
+        got = lora_ops.grouped_lora_residual(
+            x, down, up, idx, scale=cfg.adapter.alpha / rank, block_t=8,
+            interpret=True)
+        want = lora_ref.grouped_lora_residual(
+            x, down, up, idx, scale=cfg.adapter.alpha / rank)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5,
+            err_msg=f"{arch} (D={d}, r={rank})")
+
+
+@pytest.mark.parametrize("t,block_t", [(64, 16), (50, 16), (3, 16), (17, 16)])
+def test_grouped_lora_ragged_blocks(t, block_t, rng):
+    x, down, up, idx = _grouped_case(rng, t, 64, 8, 4)
+    got = lora_ops.grouped_lora_residual(
+        x, down, up, idx, scale=2.0, block_t=block_t, interpret=True)
+    want = lora_ref.grouped_lora_residual(x, down, up, idx, scale=2.0)
+    assert got.shape == (t, 64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_grouped_lora_matches_single_adapter_kernel(rng):
+    """Constant idx == the per-tenant kernel run with that adapter alone —
+    bit-for-bit in f32 (zeroed rows stay exactly zero through two matmuls)."""
+    x, down, up, _ = _grouped_case(rng, 32, 64, 8, 3)
+    for n in range(3):
+        idx = jnp.full((32,), n, jnp.int32)
+        got = lora_ops.grouped_lora_residual(
+            x, down, up, idx, scale=2.0, block_t=16, interpret=True)
+        want = lora_ops.lora_residual(
+            x, down[n], up[n], scale=2.0, block_t=16, interpret=True)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_grouped_lora_negative_idx_is_identity(rng):
+    x, down, up, _ = _grouped_case(rng, 20, 32, 4, 3)
+    idx = jnp.full((20,), -1, jnp.int32)
+    got = lora_ops.grouped_lora_residual(
+        x, down, up, idx, scale=2.0, block_t=8, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(x))
+
+
+def test_grouped_lora_nd_leading_shape(rng):
+    x = jax.random.normal(rng, (2, 5, 32))
+    down = jax.random.normal(jax.random.fold_in(rng, 1), (3, 32, 4)) * 0.05
+    up = jax.random.normal(jax.random.fold_in(rng, 2), (3, 4, 32)) * 0.05
+    idx = jax.random.randint(jax.random.fold_in(rng, 3), (2, 5), -1, 3)
+    got = lora_ops.grouped_lora_residual(
+        x, down, up, idx, scale=1.0, block_t=4, interpret=True)
+    want = lora_ref.grouped_lora_residual(x, down, up, idx, scale=1.0)
+    assert got.shape == x.shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
 # ---------------------------------------------------------------------------
 # fisher merge
 # ---------------------------------------------------------------------------

@@ -57,3 +57,31 @@ def test_activation_traffic_matches_analytic(rng):
     assert traffic["act_down"] == want
     est = split_activation_bytes_per_step(cfg.with_(dtype="float32"), 2, 12)
     assert est["act_up"] == want
+
+
+@pytest.mark.parametrize(
+    "arch",
+    ["llava-1.5-7b", "minigpt4-7b", "qwen2-vl-72b", "whisper-base",
+     "h2o-danube-1.8b", "mamba2-130m"],
+)
+def test_activation_traffic_analytic_all_archs(arch, rng):
+    """The analytic estimate must equal the MEASURED wire traffic on every
+    arch — including the encoder stream (image prefix / audio memory) that
+    the pre-fix formula dropped on multimodal archs."""
+    cfg, backbone, adp, batch = _setup(arch, rng, b=2, s=12)
+    _, _, traffic = split_train_grads(cfg, backbone, adp, batch)
+    est = split_activation_bytes_per_step(cfg.with_(dtype="float32"), 2, 12)
+    assert est["act_up"] == traffic["act_up"], (
+        f"{arch}: analytic up {est['act_up']} != measured {traffic['act_up']}")
+    assert est["act_down"] == traffic["act_down"], (
+        f"{arch}: analytic down {est['act_down']} != measured "
+        f"{traffic['act_down']}")
+
+
+def test_activation_traffic_analytic_text_only_override():
+    """n_patches=0 recovers the text-only wire cost on a multimodal arch."""
+    from repro.configs import get_smoke_config
+
+    cfg = get_smoke_config("llava-1.5-7b").with_(dtype="float32")
+    est = split_activation_bytes_per_step(cfg, 2, 12, n_patches=0)
+    assert est["act_up"] == 2 * 12 * cfg.d_model * 4
