@@ -1,95 +1,354 @@
-"""Pallas kernels: interpret-mode correctness timing + TPU roofline projections.
+"""Pallas kernel perf trajectory: interpret/ref wall times + v5e rooflines.
 
-No TPU here — wall times below are CPU interpret-mode (correctness path) and
-meaningless as TPU perf; the 'derived' column instead reports the v5e
-roofline projection (theoretical min time from bytes/flops) per kernel at a
-production-relevant shape.
+No TPU here — interpret-mode wall time is CPU executing the kernel body in
+Python and is meaningless as TPU perf. What IS meaningful, and what this
+bench pins across PRs:
+
+  * ``ref_ms`` — the jitted XLA reference on this CPU (a real baseline);
+  * ``interpret_ms`` — tracks kernel-body complexity; a PR that regresses
+    it 10x changed the kernel's work, not the machine;
+  * ``roofline_us`` — the v5e analytic floor (bytes/BW vs flops/peak) at
+    the benched shape, the number the perf rungs are closing in on.
+
+Full runs APPEND one row per kernel family to BENCH_kernels.json at the
+repo root. The trajectory is append-only: rows from earlier runs are never
+edited or dropped, every run gets the next ``seq`` number, so the file is
+a perf history readable by diffing adjacent seqs (tests/test_bench_schema.py
+enforces the invariants).
+
+Usage:
+    PYTHONPATH=src python benchmarks/kernel_bench.py            # append a run
+    PYTHONPATH=src python benchmarks/kernel_bench.py --quick    # ~20 s parity
+                                                                #  gate, no JSON
+    PYTHONPATH=src python benchmarks/kernel_bench.py --sweep    # block-size
+                                                                #  sweep feeding
+                                                                #  kernels/tuning.py
+    PYTHONPATH=src python benchmarks/kernel_bench.py --label "pr9 streaming"
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
+import sys
 import time
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+sys.path.insert(0, os.path.join(_HERE, "..", "src"))
+sys.path.insert(0, os.path.join(_HERE, "..", "tests"))
 
 import jax
 import jax.numpy as jnp
 
 from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
 
+ROOT = os.path.join(_HERE, "..")
+OUT = os.path.join(ROOT, "BENCH_kernels.json")
 
-def _time(f, *args, n=3):
-    f(*args)  # compile/warm
+FAMILIES = ("lora", "grouped_lora", "fisher_merge", "fisher_merge_stream",
+            "flash_attention", "ssd_scan")
+
+
+def _time(f, *args, n: int = 3) -> float:
+    jax.block_until_ready(f(*args))  # compile/warm
     t0 = time.time()
     for _ in range(n):
         jax.block_until_ready(f(*args))
     return (time.time() - t0) / n
 
 
-def run(quick: bool = True):
-    rows = []
-    key = jax.random.PRNGKey(0)
-    print("\n### Kernel bench (CPU interpret mode; derived = v5e roofline projection)")
+def _row(kernel, shape, interpret_s, ref_s, flops, bytes_, blocks=None):
+    t_c = flops / PEAK_FLOPS_BF16
+    t_m = bytes_ / HBM_BW
+    row = {
+        "kernel": kernel,
+        "shape": shape,
+        "dtype": "float32",
+        "interpret_ms": round(interpret_s * 1e3, 3),
+        "ref_ms": round(ref_s * 1e3, 3),
+        "roofline_us": round(max(t_c, t_m) * 1e6, 3),
+        "bound": "compute" if t_c > t_m else "memory",
+    }
+    if blocks:
+        row["blocks"] = blocks
+    print(f"    {kernel:<20} {str(shape):<44} interpret {row['interpret_ms']:9.1f}ms"
+          f"  ref {row['ref_ms']:7.2f}ms  v5e roofline {row['roofline_us']:8.1f}us"
+          f" ({row['bound']}-bound)")
+    return row
 
-    # --- LoRA: T=4096 tokens, D=4096, r=64 ---
-    T, D, r = (512, 512, 16) if quick else (4096, 4096, 64)
-    from repro.kernels.lora import ops as lora_ops
 
-    x = jax.random.normal(key, (T, D), jnp.float32)
-    a = jax.random.normal(key, (D, r)) * 0.02
-    b = jax.random.normal(key, (r, D)) * 0.02
+# --------------------------------------------------------------------------
+# per-family benches — every input gets its own PRNG key via jax.random.split
+# --------------------------------------------------------------------------
+
+def bench_lora(key, quick):
+    from repro.kernels import tuning
+    from repro.kernels.lora import ops as lora_ops, ref as lora_ref
+
+    T, D, r = (512, 512, 16) if quick else (2048, 2048, 64)
+    kx, ka, kb = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (T, D), jnp.float32)
+    a = jax.random.normal(ka, (D, r)) * 0.02
+    b = jax.random.normal(kb, (r, D)) * 0.02
+    bt = tuning.lora_block_t(T, D, r)
     dt = _time(lambda *z: lora_ops.lora_residual(*z, scale=2.0, interpret=True), x, a, b)
+    dr = _time(jax.jit(lambda *z: lora_ref.lora_residual(*z, scale=2.0)), x, a, b)
     flops = 4 * T * D * r
     bytes_ = (2 * T * D + 2 * D * r) * 2  # bf16 on TPU
-    proj = max(flops / PEAK_FLOPS_BF16, bytes_ / HBM_BW)
-    rows.append(("kernels/lora_fused", dt, f"roofline_us={proj*1e6:.1f}"))
-    print(f"    lora      T{T} D{D} r{r}: interpret {dt*1e3:.0f}ms; v5e roofline {proj*1e6:.1f}us "
-          f"({'memory' if bytes_/HBM_BW > flops/PEAK_FLOPS_BF16 else 'compute'}-bound)")
+    return _row("lora", {"T": T, "D": D, "r": r}, dt, dr, flops, bytes_,
+                blocks={"block_t": bt})
 
-    # --- Fisher merge: K=10 clients × 1.05M params ---
+
+def bench_grouped_lora(key, quick):
+    from repro.kernels import tuning
+    from repro.kernels.lora import ops as lora_ops, ref as lora_ref
+
+    T, D, r, n = (512, 512, 16, 4) if quick else (2048, 2048, 64, 8)
+    kx, ka, kb, ki = jax.random.split(key, 4)
+    x = jax.random.normal(kx, (T, D), jnp.float32)
+    a = jax.random.normal(ka, (n, D, r)) * 0.02
+    b = jax.random.normal(kb, (n, r, D)) * 0.02
+    idx = jax.random.randint(ki, (T,), -1, n)
+    bt = tuning.lora_block_t(T, D, r)
+    dt = _time(lambda *z: lora_ops.grouped_lora_residual(*z, scale=2.0, interpret=True),
+               x, a, b, idx)
+    dr = _time(jax.jit(lambda *z: lora_ref.grouped_lora_residual(*z, scale=2.0)),
+               x, a, b, idx)
+    flops = 4 * T * D * r
+    bytes_ = (2 * T * D + 2 * n * D * r) * 2 + 4 * T  # all adapters + idx stream
+    return _row("grouped_lora", {"T": T, "D": D, "r": r, "n_adapters": n}, dt, dr,
+                flops, bytes_, blocks={"block_t": bt})
+
+
+def bench_fisher(key, quick):
+    from repro.kernels import tuning
+    from repro.kernels.fisher_merge import ops as fm_ops, ref as fm_ref
+
     K, N = (5, 1 << 16) if quick else (10, 1 << 20)
-    from repro.kernels.fisher_merge import ops as fm_ops
-
-    t = jax.random.normal(key, (K, N))
-    f = jax.random.uniform(key, (K, N), minval=0.01)
+    kt, kf = jax.random.split(key)
+    t = jax.random.normal(kt, (K, N))
+    f = jax.random.uniform(kf, (K, N), minval=0.01)
     w = jnp.ones((K,))
+    bn = tuning.fisher_block_n(K, N)
     dt = _time(lambda *z: fm_ops.fisher_merge(*z, interpret=True), t, f, w)
+    dr = _time(jax.jit(fm_ref.fisher_merge), t, f, w)
     bytes_ = (2 * K * N + N) * 4
-    proj = bytes_ / HBM_BW
-    rows.append(("kernels/fisher_merge", dt, f"roofline_us={proj*1e6:.1f}"))
-    print(f"    fisher    K{K} N{N}: interpret {dt*1e3:.0f}ms; v5e roofline {proj*1e6:.1f}us (memory-bound)")
+    return _row("fisher_merge", {"K": K, "N": N}, dt, dr, 4 * K * N, bytes_,
+                blocks={"block_n": bn})
 
-    # --- Flash attention: B1 S2048 H8 D128 causal ---
-    B, S, H, Dh = (1, 256, 4, 64) if quick else (1, 2048, 8, 128)
-    from repro.kernels.flash_attention import ops as fa_ops
 
-    q = jax.random.normal(key, (B, S, H, Dh), jnp.float32)
-    k = jax.random.normal(key, (B, S, H, Dh), jnp.float32)
-    v = jax.random.normal(key, (B, S, H, Dh), jnp.float32)
-    dt = _time(lambda *z: fa_ops.flash_attention(*z, block_q=128, block_k=128,
-                                                 interpret=True), q, k, v)
+def bench_fisher_stream(key, quick):
+    from repro.kernels import tuning
+    from repro.kernels.fisher_merge import ops as fm_ops, ref as fm_ref
+
+    K, N = (5, 1 << 16) if quick else (10, 1 << 20)
+    kt, kf = jax.random.split(key)
+    t = jax.random.normal(kt, (K, N))
+    f = jax.random.uniform(kf, (K, N), minval=0.01)
+    bn = tuning.fisher_block_n(1, N)
+
+    def stream(t, f):
+        num = jnp.zeros((N,), jnp.float32)
+        den = jnp.zeros((N,), jnp.float32)
+        for i in range(K):
+            num, den = fm_ops.fisher_fold(num, den, t[i], f[i], 1.0, interpret=True)
+        return fm_ref.fisher_finalize(num, den)
+
+    def stream_ref(t, f):
+        num = jnp.zeros((N,), jnp.float32)
+        den = jnp.zeros((N,), jnp.float32)
+        for i in range(K):
+            num, den = fm_ref.fisher_fold(num, den, t[i], f[i], 1.0)
+        return fm_ref.fisher_finalize(num, den)
+
+    dt = _time(stream, t, f)
+    dr = _time(jax.jit(stream_ref), t, f)
+    # per fold: read num/den/theta/fisher, write num/den — all f32
+    bytes_ = K * 6 * N * 4
+    return _row("fisher_merge_stream", {"K": K, "N": N}, dt, dr, 4 * K * N, bytes_,
+                blocks={"block_n": bn})
+
+
+def bench_flash(key, quick):
+    from repro.kernels import tuning
+    from repro.kernels.flash_attention import ops as fa_ops, ref as fa_ref
+
+    B, S, H, Dh = (1, 256, 4, 64) if quick else (1, 1024, 8, 128)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (B, S, H, Dh), jnp.float32)
+    k = jax.random.normal(kk, (B, S, H, Dh), jnp.float32)
+    v = jax.random.normal(kv, (B, S, H, Dh), jnp.float32)
+    bq, bk = tuning.flash_blocks(S, S, Dh)
+    dt = _time(lambda *z: fa_ops.flash_attention(*z, interpret=True), q, k, v)
+    dr = _time(jax.jit(fa_ref.attention), q, k, v)
     flops = 4 * B * H * S * S * Dh / 2  # causal half
     bytes_ = 4 * B * S * H * Dh * 2
-    proj = max(flops / PEAK_FLOPS_BF16, bytes_ / HBM_BW)
-    rows.append(("kernels/flash_attention", dt, f"roofline_us={proj*1e6:.1f}"))
-    print(f"    flash     B{B} S{S} H{H} D{Dh}: interpret {dt*1e3:.0f}ms; v5e roofline {proj*1e6:.1f}us "
-          f"({'compute' if flops/PEAK_FLOPS_BF16 > bytes_/HBM_BW else 'memory'}-bound)")
+    return _row("flash_attention", {"B": B, "S": S, "H": H, "D": Dh}, dt, dr,
+                flops, bytes_, blocks={"block_q": bq, "block_k": bk})
 
-    # --- SSD: mamba2-130m layer shape ---
-    Bt, S2, Hs, P, Ns, Q = (1, 256, 4, 32, 32, 64) if quick else (1, 2048, 24, 64, 128, 256)
-    from repro.kernels.ssd_scan import ops as ssd_ops
 
-    xs = jax.random.normal(key, (Bt, S2, Hs, P)) * 0.5
-    dts = jax.random.uniform(key, (Bt, S2, Hs), minval=0.01, maxval=0.2)
+def bench_ssd(key, quick):
+    from repro.kernels import tuning
+    from repro.kernels.ssd_scan import ops as ssd_ops, ref as ssd_ref
+
+    Bt, S, Hs, P, Ns = (1, 256, 4, 32, 32) if quick else (1, 1024, 8, 64, 64)
+    kx, kd, kb, kc = jax.random.split(key, 4)
+    x = jax.random.normal(kx, (Bt, S, Hs, P)) * 0.5
+    dts = jax.random.uniform(kd, (Bt, S, Hs), minval=0.01, maxval=0.2)
     A = -jnp.ones((Hs,))
-    Bm = jax.random.normal(key, (Bt, S2, Ns)) * 0.3
-    Cm = jax.random.normal(key, (Bt, S2, Ns)) * 0.3
-    dt = _time(lambda *z: ssd_ops.ssd(*z, chunk=Q, interpret=True), xs, dts, A, Bm, Cm)
-    flops = Bt * Hs * (S2 // Q) * (2 * Q * Q * Ns + 2 * Q * Q * P + 4 * Q * Ns * P)
-    bytes_ = (Bt * S2 * Hs * P * 2 + 2 * Bt * S2 * Ns) * 2
-    proj = max(flops / PEAK_FLOPS_BF16, bytes_ / HBM_BW)
-    rows.append(("kernels/ssd_scan", dt, f"roofline_us={proj*1e6:.1f}"))
-    print(f"    ssd       B{Bt} S{S2} H{Hs}: interpret {dt*1e3:.0f}ms; v5e roofline {proj*1e6:.1f}us")
+    Bm = jax.random.normal(kb, (Bt, S, Ns)) * 0.3
+    Cm = jax.random.normal(kc, (Bt, S, Ns)) * 0.3
+    Q = tuning.ssd_chunk(S, P, Ns)
+    dt = _time(lambda *z: ssd_ops.ssd(*z, chunk=Q, interpret=True), x, dts, A, Bm, Cm)
+    dr = _time(jax.jit(lambda *z: ssd_ref.ssd_chunked(*z, Q)), x, dts, A, Bm, Cm)
+    flops = Bt * Hs * (S // Q) * (2 * Q * Q * Ns + 2 * Q * Q * P + 4 * Q * Ns * P)
+    bytes_ = (Bt * S * Hs * P * 2 + 2 * Bt * S * Ns) * 2
+    return _row("ssd_scan", {"B": Bt, "S": S, "H": Hs, "P": P, "N": Ns}, dt, dr,
+                flops, bytes_, blocks={"chunk": Q})
 
-    return [(n, w, d) for n, w, d in rows]
+
+BENCHES = {
+    "lora": bench_lora,
+    "grouped_lora": bench_grouped_lora,
+    "fisher_merge": bench_fisher,
+    "fisher_merge_stream": bench_fisher_stream,
+    "flash_attention": bench_flash,
+    "ssd_scan": bench_ssd,
+}
+
+
+# --------------------------------------------------------------------------
+# block-size sweep — the measurement behind kernels/tuning.PINNED
+# --------------------------------------------------------------------------
+
+def sweep(key):
+    """Time each family at candidate block sizes (quick shapes: interpret
+    mode scales with the grid structure, which is what blocks change)."""
+    from repro.kernels.fisher_merge import ops as fm_ops
+    from repro.kernels.flash_attention import ops as fa_ops
+    from repro.kernels.lora import ops as lora_ops
+
+    out = {}
+    kx, ka, kb = jax.random.split(jax.random.fold_in(key, 1), 3)
+    T, D, r = 512, 512, 16
+    x = jax.random.normal(kx, (T, D))
+    a = jax.random.normal(ka, (D, r)) * 0.02
+    b = jax.random.normal(kb, (r, D)) * 0.02
+    out["lora/block_t"] = {
+        str(bt): round(_time(lambda *z: lora_ops.lora_residual(
+            *z, scale=2.0, block_t=bt, interpret=True), x, a, b) * 1e3, 2)
+        for bt in (64, 128, 256, 512)}
+
+    kt, kf = jax.random.split(jax.random.fold_in(key, 2))
+    K, N = 5, 1 << 16
+    t = jax.random.normal(kt, (K, N))
+    f = jax.random.uniform(kf, (K, N), minval=0.01)
+    w = jnp.ones((K,))
+    out["fisher_merge/block_n"] = {
+        str(bn): round(_time(lambda *z: fm_ops.fisher_merge(
+            *z, block_n=bn, interpret=True), t, f, w) * 1e3, 2)
+        for bn in (256, 512, 1024, 2048)}
+
+    kq, kk, kv = jax.random.split(jax.random.fold_in(key, 3), 3)
+    B, S, H, Dh = 1, 256, 4, 64
+    q = jax.random.normal(kq, (B, S, H, Dh))
+    kk_ = jax.random.normal(kk, (B, S, H, Dh))
+    vv = jax.random.normal(kv, (B, S, H, Dh))
+    out["flash_attention/block_q_k"] = {
+        f"{bq}x{bk}": round(_time(lambda *z: fa_ops.flash_attention(
+            *z, block_q=bq, block_k=bk, interpret=True), q, kk_, vv) * 1e3, 2)
+        for bq, bk in ((64, 64), (128, 128), (128, 256), (256, 128))}
+
+    for name, table in out.items():
+        best = min(table, key=table.get)
+        print(f"    sweep {name:<28} " +
+              "  ".join(f"{k}:{v}ms" for k, v in table.items()) +
+              f"   -> best {best}")
+    return out
+
+
+# --------------------------------------------------------------------------
+# parity gate (--quick): one harness smoke case per family, no JSON
+# --------------------------------------------------------------------------
+
+def parity_gate():
+    import kernel_harness as kh
+
+    key = jax.random.PRNGKey(7)
+    for case in kh.smoke_cases():
+        kh.check_case(case, jax.random.fold_in(key, hash(case.id) % (1 << 30)))
+        print(f"    parity OK  {case.id}")
+
+
+def run(quick: bool = True, key=None):
+    """Programmatic entry (benchmarks/run.py): returns (name, wall, note) rows."""
+    key = jax.random.PRNGKey(0) if key is None else key
+    print("\n### Kernel bench (CPU interpret mode; roofline = v5e projection)")
+    rows = []
+    for i, fam in enumerate(FAMILIES):
+        rows.append(BENCHES[fam](jax.random.fold_in(key, i), quick))
+    return [(f"kernels/{r['kernel']}", r["interpret_ms"] / 1e3,
+             f"roofline_us={r['roofline_us']}") for r in rows]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="parity gate + small shapes, no JSON written")
+    ap.add_argument("--sweep", action="store_true",
+                    help="block-size sweep (informs kernels/tuning.PINNED)")
+    ap.add_argument("--label", default="run",
+                    help="label stamped on this run's rows in the trajectory")
+    ap.add_argument("--out", default=None,
+                    help=f"output JSON (default {OUT}; --quick skips writing)")
+    args = ap.parse_args(argv)
+
+    key = jax.random.PRNGKey(0)
+    if args.quick:
+        print("### kernel parity gate (harness smoke cases)")
+        parity_gate()
+
+    print("\n### Kernel bench (CPU interpret mode; roofline = v5e projection)")
+    rows = []
+    for i, fam in enumerate(FAMILIES):
+        row = BENCHES[fam](jax.random.fold_in(key, i), args.quick)
+        rows.append(row)
+
+    sweep_tables = None
+    if args.sweep:
+        print("\n### block-size sweep")
+        sweep_tables = sweep(jax.random.fold_in(key, 1000))
+
+    out_path = args.out or (None if args.quick else OUT)
+    if out_path:
+        doc = {"config": {
+            "device": "cpu (Pallas interpret mode); roofline projected for TPU v5e",
+            "roofline": {"peak_flops_bf16": PEAK_FLOPS_BF16, "hbm_bw": HBM_BW},
+            "schema": "append-only: each run appends one row per kernel family with "
+                      "the next seq; existing rows are never edited or removed",
+        }, "results": []}
+        if os.path.exists(out_path):
+            try:
+                with open(out_path) as f:
+                    doc = json.load(f)
+            except (json.JSONDecodeError, OSError):
+                pass
+        prev = doc.get("results", [])
+        seq = 1 + max((r.get("seq", 0) for r in prev), default=0)
+        for row in rows:
+            row["seq"] = seq
+            row["label"] = args.label
+            if sweep_tables is not None:
+                row["sweep"] = {k: v for k, v in sweep_tables.items()
+                                if k.startswith(row["kernel"] + "/")} or None
+                if row["sweep"] is None:
+                    del row["sweep"]
+        doc["results"] = prev + rows
+        with open(out_path, "w") as f:
+            json.dump(doc, f, indent=1)
+        print(f"appended seq={seq} ({len(rows)} rows) to {out_path}")
+    return 0
 
 
 if __name__ == "__main__":
-    run(quick=False)
+    raise SystemExit(main())

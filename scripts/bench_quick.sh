@@ -3,8 +3,10 @@
 # Part of scripts/smoke.sh; run the full sweeps with
 #   PYTHONPATH=src python benchmarks/engine_bench.py
 #   PYTHONPATH=src python benchmarks/serve_bench.py
+#   PYTHONPATH=src python benchmarks/kernel_bench.py   # appends BENCH_kernels.json
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python benchmarks/engine_bench.py --quick "$@"
 python benchmarks/serve_bench.py --quick
+python benchmarks/kernel_bench.py --quick

@@ -30,6 +30,61 @@ def _kernel(t_ref, f_ref, w_ref, o_ref, *, eps: float):
     o_ref[...] = ((num / (den + eps)).astype(o_ref.dtype))[None, :]
 
 
+def _fold_kernel(num_ref, den_ref, t_ref, f_ref, w_ref, num_out, den_out):
+    w = w_ref[0, 0]
+    wf = w * f_ref[...].astype(jnp.float32)
+    num_out[...] = num_ref[...] + wf * t_ref[...].astype(jnp.float32)
+    den_out[...] = den_ref[...] + wf
+
+
+def fisher_fold_2d(num, den, theta, fisher, w, *, block_n: int = 1024,
+                   interpret: bool = False):
+    """One streaming-merge fold step: (num', den') = (num + w·F·θ, den + w·F).
+
+    num/den (N,) float32 running sums; theta/fisher (N,) any dtype; w scalar.
+    The streaming counterpart of :func:`fisher_merge_2d` — the server folds
+    one client at a time, so no (K, N) stack ever exists. Same roofline
+    character (pure bandwidth, zero reuse); the fused kernel reads each of
+    the four streams once per element and writes two.
+    """
+    N = num.shape[0]
+    bn = min(block_n, N)
+    pad = (-N) % bn
+    if pad:
+        zpad = lambda a: jnp.pad(a.reshape(1, N), ((0, 0), (0, pad)))
+    else:
+        zpad = lambda a: a.reshape(1, N)
+    num2, den2 = zpad(num), zpad(den)
+    t2, f2 = zpad(theta), zpad(fisher)
+    Np = num2.shape[1]
+    w2 = jnp.asarray(w, jnp.float32).reshape(1, 1)
+
+    num_new, den_new = pl.pallas_call(
+        _fold_kernel,
+        grid=(Np // bn,),
+        in_specs=[
+            pl.BlockSpec((1, bn), lambda i: (0, i)),
+            pl.BlockSpec((1, bn), lambda i: (0, i)),
+            pl.BlockSpec((1, bn), lambda i: (0, i)),
+            pl.BlockSpec((1, bn), lambda i: (0, i)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bn), lambda i: (0, i)),
+            pl.BlockSpec((1, bn), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, Np), jnp.float32),
+            jax.ShapeDtypeStruct((1, Np), jnp.float32),
+        ],
+        interpret=interpret,
+    )(num2, den2, t2, f2, w2)
+    num_new, den_new = num_new[0], den_new[0]
+    if pad:
+        num_new, den_new = num_new[:N], den_new[:N]
+    return num_new, den_new
+
+
 def fisher_merge_2d(theta, fisher, weights, *, eps: float = 1e-8,
                     block_n: int = 1024, interpret: bool = False):
     """theta/fisher (K, N); weights (K,) -> (N,)."""

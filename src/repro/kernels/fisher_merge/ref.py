@@ -15,3 +15,19 @@ def fisher_merge(theta, fisher, weights, *, eps: float = 1e-8):
     num = jnp.sum(w * f * t, axis=0)
     den = jnp.sum(w * f, axis=0)
     return (num / (den + eps)).astype(theta.dtype)
+
+
+def fisher_fold(num, den, theta, fisher, w):
+    """Streaming fold step: one client's (θ, F, w) into the running sums.
+
+    num/den (N,) float32; folding every client then calling
+    :func:`fisher_finalize` reproduces :func:`fisher_merge` up to f32
+    summation order.
+    """
+    wf = jnp.float32(w) * fisher.astype(jnp.float32)
+    return num + wf * theta.astype(jnp.float32), den + wf
+
+
+def fisher_finalize(num, den, *, eps: float = 1e-8, dtype=jnp.float32):
+    """num / (den + eps) with the accumulators' f32 carried to the end."""
+    return (num / (den + eps)).astype(dtype)

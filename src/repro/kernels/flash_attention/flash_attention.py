@@ -29,9 +29,9 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -2.0e38
 
 
-def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+def _kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_scr, l_scr, acc_scr, *,
             scale: float, causal: bool, window: Optional[int], softcap: float,
-            block_q: int, block_k: int, q_offset: int, n_k: int):
+            block_q: int, block_k: int, q_offset: int, n_k: int, kv_len: int):
     kb = pl.program_id(3)
 
     @pl.when(kb == 0)
@@ -51,7 +51,10 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
     qb = pl.program_id(2)
     qpos = qb * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0) + q_offset
     kpos = kb * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
-    mask = jnp.ones((block_q, block_k), jnp.bool_)
+    # padded keys (kpos >= kv_len) must never reach the softmax denominator;
+    # the causal mask happens to cover them when Sq == Sk, but bidirectional
+    # or cross-attention shapes need the explicit bound
+    mask = kpos < kv_len
     if causal:
         mask = mask & (kpos <= qpos)
     if window is not None:
@@ -76,6 +79,9 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
     def _finish():
         denom = jnp.maximum(l_scr[...], 1e-30)
         o_ref[0, :, 0, :] = (acc_scr[...] / denom).astype(o_ref.dtype)
+        # per-row logsumexp (flash residual for the backward pass); rows
+        # that never saw an unmasked key keep m == NEG_INF as the marker
+        lse_ref[0, :, 0] = (m_scr[...] + jnp.log(denom))[:, 0]
 
 
 def flash_attention(
@@ -86,10 +92,13 @@ def flash_attention(
     block_q: int = 128,
     block_k: int = 512,
     interpret: bool = False,
+    return_lse: bool = False,
 ):
     """q (B, Sq, H, D); k, v (B, Sk, Hkv, D), H % Hkv == 0. Returns (B, Sq, H, D).
 
     Query i has absolute position (Sk - Sq) + i (decode/prefill alignment).
+    With ``return_lse`` also returns the per-row logsumexp (B, Sq, H) — the
+    flash residual the custom VJP in ``ops.py`` rebuilds probabilities from.
     """
     B, Sq, H, D = q.shape
     Bk, Sk, Hkv, Dk = k.shape
@@ -120,6 +129,7 @@ def flash_attention(
             block_k=bk,
             q_offset=q_offset,
             n_k=n_k,
+            kv_len=Sk,
         ),
         grid=(B, H, n_q, n_k),
         in_specs=[
@@ -127,8 +137,14 @@ def flash_attention(
             pl.BlockSpec((1, bk, 1, D), lambda b, h, i, j, g=group: (b, j, h // g, 0)),
             pl.BlockSpec((1, bk, 1, D), lambda b, h, i, j, g=group: (b, j, h // g, 0)),
         ],
-        out_specs=pl.BlockSpec((1, bq, 1, D), lambda b, h, i, j: (b, i, h, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, Sqp, H, D), q.dtype),
+        out_specs=[
+            pl.BlockSpec((1, bq, 1, D), lambda b, h, i, j: (b, i, h, 0)),
+            pl.BlockSpec((1, bq, 1), lambda b, h, i, j: (b, i, h)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Sqp, H, D), q.dtype),
+            jax.ShapeDtypeStruct((B, Sqp, H), jnp.float32),
+        ],
         scratch_shapes=[
             pltpu.VMEM((bq, 1), jnp.float32),
             pltpu.VMEM((bq, 1), jnp.float32),
@@ -136,4 +152,7 @@ def flash_attention(
         ],
         interpret=interpret,
     )(q, k, v)
-    return out[:, :Sq] if pad_q else out
+    out, lse = out
+    if pad_q:
+        out, lse = out[:, :Sq], lse[:, :Sq]
+    return (out, lse) if return_lse else out

@@ -16,6 +16,37 @@ import jax.numpy as jnp
 from repro.strategies.base import Strategy, register
 
 
+def _fisher_fold_tree(num, den, theta, fisher, w, *, use_pallas=False):
+    """Fold one client's (θ, F, w) into the running f32 num/den trees.
+
+    The jitted jnp path fuses the fold into one elementwise pass per leaf;
+    ``use_pallas`` routes each leaf through the fused ``fisher_fold`` Pallas
+    kernel instead (interpret mode off-TPU, same numerics)."""
+    if use_pallas:
+        from repro.kernels.fisher_merge import ops as fm_ops
+
+        folded = jax.tree.map(
+            lambda nm, dn, t, f: fm_ops.fisher_fold(nm, dn, t, f, w,
+                                                    interpret=True),
+            num, den, theta, fisher)
+    else:
+        folded = _fisher_fold_tree_jit(num, den, theta, fisher, w)
+    new_num = jax.tree.map(lambda p: p[0], folded,
+                           is_leaf=lambda p: isinstance(p, tuple))
+    new_den = jax.tree.map(lambda p: p[1], folded,
+                           is_leaf=lambda p: isinstance(p, tuple))
+    return new_num, new_den
+
+
+@jax.jit
+def _fisher_fold_tree_jit(num, den, theta, fisher, w):
+    return jax.tree.map(
+        lambda nm, dn, t, f: (
+            nm + w * f.astype(jnp.float32) * t.astype(jnp.float32),
+            dn + w * f.astype(jnp.float32)),
+        num, den, theta, fisher)
+
+
 @register("fedavg")
 @dataclass(frozen=True)
 class FedAvg(Strategy):
@@ -52,29 +83,29 @@ class FedNano(Strategy):
             thetas, fishers, data_sizes, use_pallas=use_pallas
         )
 
-    # streaming Fisher merge: fold Σ wFθ / Σ wF pairs chunk by chunk;
-    # finalize reproduces Eq. 1 with the eps floor scaled by the total
-    # weight (num/(den+eps·W) == (num/W)/((den/W)+eps), the batch formula).
+    # streaming Fisher merge: fold Σ wFθ / Σ wF ONE CLIENT AT A TIME into
+    # running f32 sums — no (K, ...) stack ever exists, so server memory is
+    # O(1) in the client count (the chunked/buffered engines hand us their
+    # buffered uploads; we still never stack them). finalize reproduces
+    # Eq. 1 with the eps floor scaled by the total weight
+    # (num/(den+eps·W) == (num/W)/((den/W)+eps), the batch formula).
     def agg_stream_fold(self, acc, thetas, fishers, weights, *, use_pallas=False):
-        from repro.utils import tree_add, tree_stack
-
         if fishers is None or any(f is None for f in fishers):
             raise ValueError("fednano streaming merge needs a FIM per upload")
-        w = jnp.asarray(weights, jnp.float32)
-        ts, fs = tree_stack(thetas), tree_stack(fishers)
-        num = jax.tree.map(
-            lambda t, f: jnp.tensordot(
-                w, f.astype(jnp.float32) * t.astype(jnp.float32), axes=1),
-            ts, fs)
-        den = jax.tree.map(
-            lambda f: jnp.tensordot(w, f.astype(jnp.float32), axes=1), fs)
-        wsum = float(jnp.sum(w))
         if acc is None:
             like = jax.tree.map(lambda x: x.dtype, thetas[0])
-            return {"num": num, "den": den, "w": wsum, "like": like}
-        return {"num": tree_add(acc["num"], num),
-                "den": tree_add(acc["den"], den),
-                "w": acc["w"] + wsum, "like": acc["like"]}
+            acc = {"num": jax.tree.map(
+                       lambda x: jnp.zeros(x.shape, jnp.float32), thetas[0]),
+                   "den": jax.tree.map(
+                       lambda x: jnp.zeros(x.shape, jnp.float32), thetas[0]),
+                   "w": 0.0, "like": like}
+        num, den = acc["num"], acc["den"]
+        for theta, fisher, w in zip(thetas, fishers, weights):
+            num, den = _fisher_fold_tree(num, den, theta, fisher,
+                                         jnp.float32(w), use_pallas=use_pallas)
+        return {"num": num, "den": den,
+                "w": acc["w"] + float(sum(float(w) for w in weights)),
+                "like": acc["like"]}
 
     def agg_stream_finalize(self, acc, *, use_pallas=False, eps: float = 1e-8):
         if acc is None:

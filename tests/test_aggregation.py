@@ -118,3 +118,71 @@ def test_aggregate_registry(rng):
         assert out is not None
     with pytest.raises(ValueError):
         aggregate("nope", trees, fs, [1, 1])
+
+
+# ---------------------------------------------------------------------------
+# streaming Fisher merge (FedNano.agg_stream_*): O(1) server memory
+# ---------------------------------------------------------------------------
+
+def _no_stack_allowed(monkeypatch):
+    """Make every tree_stack alias explode: the streaming path must never
+    materialize a (K, ...) per-client stack."""
+    import repro.core.aggregation as agg_mod
+    import repro.core.client as client_mod
+    import repro.utils as utils_mod
+    import repro.utils.tree as tree_mod
+
+    def boom(*a, **k):
+        raise AssertionError("streaming merge materialized a client stack")
+
+    for mod in (tree_mod, utils_mod, agg_mod, client_mod):
+        monkeypatch.setattr(mod, "tree_stack", boom)
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+@pytest.mark.parametrize("chunking", [[4], [1, 3], [2, 1, 1], [1, 1, 1, 1]])
+def test_fednano_streaming_matches_materializing(rng, monkeypatch, use_pallas,
+                                                 chunking):
+    from repro.strategies import get_strategy
+
+    trees = [_tree(jax.random.fold_in(rng, i)) for i in range(4)]
+    fishers = [jax.tree.map(lambda x: jnp.abs(x) + 0.2, t) for t in trees]
+    weights = [1.0, 2.0, 3.0, 4.0]
+    want = fisher_merge(trees, fishers, weights, use_pallas=False)
+
+    _no_stack_allowed(monkeypatch)  # AFTER the materializing oracle ran
+    strat = get_strategy("fednano")
+    acc, i = None, 0
+    for size in chunking:
+        acc = strat.agg_stream_fold(
+            acc, trees[i:i + size], fishers[i:i + size], weights[i:i + size],
+            use_pallas=use_pallas)
+        i += size
+    got = strat.agg_stream_finalize(acc, use_pallas=use_pallas)
+    assert tree_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_fednano_streaming_order_invariant(rng, monkeypatch):
+    """Folding clients in any arrival order gives the same merge (mod fp)."""
+    from repro.strategies import get_strategy
+
+    trees = [_tree(jax.random.fold_in(rng, i)) for i in range(3)]
+    fishers = [jax.tree.map(lambda x: jnp.abs(x) + 0.1, t) for t in trees]
+    _no_stack_allowed(monkeypatch)
+    strat = get_strategy("fednano")
+
+    def run(order):
+        acc = None
+        for i in order:
+            acc = strat.agg_stream_fold(acc, [trees[i]], [fishers[i]], [i + 1.0])
+        return strat.agg_stream_finalize(acc)
+
+    assert tree_allclose(run([0, 1, 2]), run([2, 0, 1]), rtol=1e-6, atol=1e-6)
+
+
+def test_fednano_streaming_requires_fisher(rng):
+    from repro.strategies import get_strategy
+
+    trees = [_tree(rng)]
+    with pytest.raises(ValueError):
+        get_strategy("fednano").agg_stream_fold(None, trees, [None], [1.0])

@@ -1,0 +1,121 @@
+"""Schema tests for the pinned BENCH_*.json perf trajectories at repo root.
+
+These files are the repo's perf history — a PR that breaks their shape (or
+rewrites history in the append-only kernel trajectory) silently destroys
+the ability to diff perf across PRs, so the schema is enforced here.
+"""
+import json
+import math
+import os
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+
+KERNEL_FAMILIES = {"lora", "grouped_lora", "fisher_merge",
+                   "fisher_merge_stream", "flash_attention", "ssd_scan"}
+
+
+def _load(name):
+    path = os.path.join(ROOT, name)
+    assert os.path.exists(path), f"{name} missing from repo root"
+    with open(path) as f:
+        return json.load(f)
+
+
+def _assert_finite_number(row, key, ctx):
+    assert key in row, f"{ctx}: missing required key {key!r} in {sorted(row)}"
+    v = row[key]
+    assert isinstance(v, (int, float)) and not isinstance(v, bool), \
+        f"{ctx}: {key}={v!r} is not a number"
+    assert math.isfinite(v), f"{ctx}: {key}={v!r} is not finite"
+
+
+# ---------------------------------------------------------------------------
+# common shape: {"config": {...}, "results": [...]}
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["BENCH_kernels.json", "BENCH_engine.json",
+                                  "BENCH_serve.json"])
+def test_bench_doc_shape(name):
+    doc = _load(name)
+    assert set(doc) == {"config", "results"}, f"{name}: top-level keys {sorted(doc)}"
+    assert isinstance(doc["config"], dict) and doc["config"]
+    assert isinstance(doc["results"], list) and doc["results"], \
+        f"{name}: results must be a non-empty list"
+
+
+# ---------------------------------------------------------------------------
+# BENCH_kernels.json — the append-only trajectory
+# ---------------------------------------------------------------------------
+
+def test_kernels_rows():
+    doc = _load("BENCH_kernels.json")
+    for i, row in enumerate(doc["results"]):
+        ctx = f"BENCH_kernels.json results[{i}]"
+        assert row.get("kernel") in KERNEL_FAMILIES, \
+            f"{ctx}: unknown kernel {row.get('kernel')!r}"
+        assert isinstance(row.get("shape"), dict) and row["shape"], ctx
+        for dim, v in row["shape"].items():
+            assert isinstance(v, int) and v > 0, f"{ctx}: shape[{dim}]={v!r}"
+        assert isinstance(row.get("label"), str) and row["label"], ctx
+        assert row.get("bound") in ("compute", "memory"), ctx
+        for key in ("interpret_ms", "ref_ms", "roofline_us"):
+            _assert_finite_number(row, key, ctx)
+            assert row[key] >= 0, f"{ctx}: {key} negative"
+        _assert_finite_number(row, "seq", ctx)
+
+
+def test_kernels_every_family_present():
+    doc = _load("BENCH_kernels.json")
+    seen = {r["kernel"] for r in doc["results"]}
+    missing = KERNEL_FAMILIES - seen
+    assert not missing, f"BENCH_kernels.json missing families: {sorted(missing)}"
+
+
+def test_kernels_append_only_ordering():
+    """seq must be non-decreasing down the file (append-only history), start
+    at 1, and have no gaps between consecutive run groups."""
+    doc = _load("BENCH_kernels.json")
+    seqs = [r["seq"] for r in doc["results"]]
+    assert all(isinstance(s, int) and s >= 1 for s in seqs)
+    assert seqs == sorted(seqs), "rows are not in append order (seq decreased)"
+    runs = sorted(set(seqs))
+    assert runs[0] == 1 and runs == list(range(1, len(runs) + 1)), \
+        f"seq groups have gaps: {runs}"
+
+
+def test_kernels_config_pins_roofline():
+    cfg = _load("BENCH_kernels.json")["config"]
+    for key in ("device", "roofline", "schema"):
+        assert key in cfg
+    _assert_finite_number(cfg["roofline"], "peak_flops_bf16", "config.roofline")
+    _assert_finite_number(cfg["roofline"], "hbm_bw", "config.roofline")
+
+
+# ---------------------------------------------------------------------------
+# BENCH_engine.json / BENCH_serve.json — keyed-row documents
+# ---------------------------------------------------------------------------
+
+def test_engine_rows():
+    doc = _load("BENCH_engine.json")
+    keys = [r["clients"] for r in doc["results"]]
+    assert keys == sorted(keys) and len(set(keys)) == len(keys), \
+        "engine rows must be unique and sorted by clients"
+    for i, row in enumerate(doc["results"]):
+        ctx = f"BENCH_engine.json results[{i}]"
+        for key in ("sequential_per_round_s", "vmap_per_round_s", "speedup"):
+            _assert_finite_number(row, key, ctx)
+        assert isinstance(row.get("strategy"), str), ctx
+
+
+def test_serve_rows():
+    doc = _load("BENCH_serve.json")
+    keys = [(r["tenants"], r["requests"]) for r in doc["results"]]
+    assert keys == sorted(keys) and len(set(keys)) == len(keys), \
+        "serve rows must be unique and sorted by (tenants, requests)"
+    for i, row in enumerate(doc["results"]):
+        ctx = f"BENCH_serve.json results[{i}]"
+        for key in ("engine_s", "naive_s", "engine_tok_s", "naive_tok_s",
+                    "speedup", "total_tokens"):
+            _assert_finite_number(row, key, ctx)

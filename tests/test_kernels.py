@@ -13,9 +13,8 @@ from repro.kernels.flash_attention import ops as fa_ops, ref as fa_ref
 from repro.kernels.lora import ops as lora_ops, ref as lora_ref
 from repro.kernels.ssd_scan import ops as ssd_ops, ref as ssd_ref
 
-
-def _tol(dtype):
-    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-5, atol=2e-5)
+# single source of truth for tolerances: tests/kernel_harness.py
+from kernel_harness import assert_close
 
 
 # ---------------------------------------------------------------------------
@@ -32,9 +31,7 @@ def test_lora_kernel(shape, rank, dtype, rng):
     up = (jax.random.normal(jax.random.fold_in(rng, 2), (rank, d)) * 0.05).astype(dtype)
     got = lora_ops.lora_residual(x, down, up, scale=2.0, block_t=32, interpret=True)
     want = lora_ref.lora_residual(x, down, up, scale=2.0)
-    np.testing.assert_allclose(
-        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype)
-    )
+    assert_close(got, want, kernel="lora", dtype=dtype)
 
 
 def test_lora_zero_up_is_identity(rng):
@@ -130,6 +127,32 @@ def test_grouped_lora_negative_idx_is_identity(rng):
     np.testing.assert_array_equal(np.asarray(got), np.asarray(x))
 
 
+def test_grouped_lora_negative_idx_identity_rows_bf16(rng):
+    """idx == -1 rows pass through EXACTLY in bf16 too — the kernel zeroes
+    their adapter contribution rather than rounding x through the matmuls."""
+    x, down, up, _ = _grouped_case(rng, 21, 32, 4, 3, dtype=jnp.bfloat16)
+    idx = jax.random.randint(jax.random.fold_in(rng, 9), (21,), -1, 3)
+    idx = idx.at[:5].set(-1)  # guarantee identity rows mixed into real blocks
+    got = lora_ops.grouped_lora_residual(
+        x, down, up, idx, scale=2.0, block_t=8, interpret=True)
+    neg = np.asarray(idx) < 0
+    np.testing.assert_array_equal(np.asarray(got)[neg], np.asarray(x)[neg])
+    want = lora_ref.grouped_lora_residual(x, down, up, idx, scale=2.0)
+    assert_close(got, want, kernel="grouped_lora", dtype=jnp.bfloat16)
+
+
+@pytest.mark.parametrize("t,block_t", [(17, 16), (50, 16)])
+def test_grouped_lora_mixed_block_bf16(t, block_t, rng):
+    """Ragged tail blocks holding several distinct adapter ids, in bf16."""
+    x, down, up, idx = _grouped_case(rng, t, 64, 8, 4, dtype=jnp.bfloat16)
+    assert len(set(np.asarray(idx).tolist())) >= 3
+    got = lora_ops.grouped_lora_residual(
+        x, down, up, idx, scale=2.0, block_t=block_t, interpret=True)
+    want = lora_ref.grouped_lora_residual(x, down, up, idx, scale=2.0)
+    assert got.shape == (t, 64)
+    assert_close(got, want, kernel="grouped_lora", dtype=jnp.bfloat16)
+
+
 def test_grouped_lora_nd_leading_shape(rng):
     x = jax.random.normal(rng, (2, 5, 32))
     down = jax.random.normal(jax.random.fold_in(rng, 1), (3, 32, 4)) * 0.05
@@ -155,9 +178,7 @@ def test_fisher_merge_kernel(k, n, dtype, rng):
     w = jax.random.uniform(jax.random.fold_in(rng, 2), (k,), minval=0.1)
     got = fm_ops.fisher_merge(t, f, w, block_n=256, interpret=True)
     want = fm_ref.fisher_merge(t, f, w)
-    np.testing.assert_allclose(
-        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype)
-    )
+    assert_close(got, want, kernel="fisher_merge", dtype=dtype)
 
 
 @pytest.mark.smoke
@@ -197,9 +218,7 @@ def test_flash_attention_kernel(case, dtype, rng):
         block_q=64, block_k=64, interpret=True,
     )
     want = fa_ref.attention(q, k, v, causal=causal, window=window, softcap=cap)
-    np.testing.assert_allclose(
-        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype)
-    )
+    assert_close(got, want, kernel="flash_attention", dtype=dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -225,8 +244,7 @@ def test_ssd_kernel_vs_sequential(case, dtype, rng):
     C = (jax.random.normal(jax.random.fold_in(rng, 4), (b, s, n)) * 0.3).astype(dtype)
     want = ssd_ref.ssd_reference_sequential(x, dt, A, B, C)
     got = ssd_ops.ssd(x, dt, A, B, C, chunk=q, interpret=True)
-    tol = dict(rtol=5e-2, atol=5e-2) if dtype == jnp.bfloat16 else dict(rtol=1e-4, atol=1e-4)
-    np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(want, np.float32), **tol)
+    assert_close(got, want, kernel="ssd_scan_vs_sequential", dtype=dtype)
 
 
 def test_ssd_chunked_oracle_matches_sequential(rng):
