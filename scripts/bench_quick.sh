@@ -8,5 +8,9 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python benchmarks/engine_bench.py --quick "$@"
+# sharded-engine smoke: forces a 2-device CPU mesh and runs the
+# vmap-vs-sharded comparison end to end (fresh process — the topology
+# flag must precede jax init, so it can't share the run above)
+python benchmarks/engine_bench.py --quick --devices 2
 python benchmarks/serve_bench.py --quick
 python benchmarks/kernel_bench.py --quick

@@ -24,7 +24,11 @@ def _norm_weights(sizes: Sequence[float], n: int):
         w = jnp.ones((n,), jnp.float32) / n
     else:
         w = jnp.asarray(sizes, jnp.float32)
-        w = w / jnp.sum(w)
+        # guard an all-zero-weight cohort (e.g. every row masked out):
+        # 0/0 would poison the merge with NaN; fall back to uniform
+        total = jnp.sum(w)
+        w = jnp.where(total > 0, w / jnp.where(total > 0, total, 1.0),
+                      jnp.ones_like(w) / n)
     return w
 
 

@@ -12,13 +12,25 @@ wrapped objective and estimate the diagonal FIM. ``strategy`` arguments
 accept either a registered name ("fednano", "fedprox", …) or a ``Strategy``
 instance — names are resolved through the registry.
 
-Two execution paths share the same step bodies (one source of numerics):
+Three execution paths share the same step bodies (one source of numerics):
 
   * ``local_update``       — one client, Python loop over T jitted steps.
   * ``local_update_many``  — a cohort of homogeneous clients at once:
     per-client state pytrees are stacked along a new leading axis and the
     whole round runs as ``vmap`` (over clients) of ``lax.scan`` (over local
     steps), so a 1k-client round costs one dispatch instead of 1k·T.
+  * the same stacked layout partitioned over a 1-D ``("clients",)`` device
+    mesh: ``make_many_update(..., mesh=...)`` wraps the identical vmapped
+    body in ``shard_map``, so every device runs K/D clients in parallel
+    with unchanged per-client arithmetic (the sharded engine pads ragged
+    cohorts by repeating the last row; padding rows are sliced off before
+    any state, metric, or byte leaves this module).
+
+``local_update_many`` is itself split into ``prepare_cohort`` (host-side
+validation + stacking + device placement), ``launch_cohort`` (the async
+device dispatch), and ``collect_cohort`` (device→host unstack + state
+rebuild), so the round engine can double-buffer: prepare cohort k+1 on the
+host while cohort k computes on the devices.
 """
 from __future__ import annotations
 
@@ -30,6 +42,7 @@ from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tupl
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import adapters as adapters_lib
 from repro.core.fisher import FisherAccumulator, fisher_pass
@@ -72,6 +85,48 @@ def init_client(key, cfg, cid: int, n_examples: int, strategy) -> ClientState:
     from repro.strategies.base import get_strategy
 
     return get_strategy(strategy).init_client(key, cfg, cid, n_examples)
+
+
+@functools.lru_cache(maxsize=16)
+def _make_batched_init(cfg, dual: bool) -> Callable:
+    """Jitted vmapped variant of the base ``Strategy.init_client`` body.
+
+    jax.random is counter-based (threefry): ``vmap(split)`` /
+    ``vmap(init_nanoedge)`` over stacked keys draw bit-identical values to K
+    sequential per-key calls, so the fast path is exact, not approximate.
+    """
+
+    def one(key):
+        k1, k2 = jax.random.split(key)
+        adp = adapters_lib.init_nanoedge(k1, cfg)
+        local = adapters_lib.init_nanoedge(k2, cfg) if dual else None
+        return adp, adamw_init(adp), local
+
+    return jax.jit(jax.vmap(one))
+
+
+def init_clients_batched(strategy, keys, cfg, cids, n_examples) -> List[ClientState]:
+    """Batch-initialize a homogeneous cohort in one device dispatch.
+
+    Per-client ``init_client`` costs O(K) dispatches and dominates setup
+    wall-clock at 10k clients; this stacks the PRNG keys and runs ONE jitted
+    vmap, then unstacks through numpy views. Only valid for strategies using
+    the base ``Strategy.init_client`` body (the ``Strategy.init_clients``
+    hook guards this and falls back to the loop otherwise).
+    """
+    k = len(cids)
+    assert len(keys) == k and len(n_examples) == k
+    adp, opt, local = _make_batched_init(cfg, bool(strategy.dual_adapters))(
+        jnp.stack(list(keys)))
+    adp_list = _host_unstack(adp, k)
+    opt_list = _host_unstack(opt, k)
+    local_list = (_host_unstack(local, k)
+                  if strategy.dual_adapters else [None] * k)
+    return [
+        ClientState(cid=cid, adapters=adp_list[i], opt_state=opt_list[i],
+                    n_examples=n, local_adapters=local_list[i])
+        for i, (cid, n) in enumerate(zip(cids, n_examples))
+    ]
 
 
 def client_ref_like(state: ClientState) -> ClientState:
@@ -282,7 +337,8 @@ def local_update(
 @functools.lru_cache(maxsize=64)
 def make_many_update(cfg, strategy, hp: HyperParams, *, downloads: bool,
                      warmup: bool, has_local: bool, train_t: int, warm_t: int,
-                     fish_t: int, shared_batches: bool) -> Callable:
+                     fish_t: int, shared_batches: bool,
+                     mesh: Optional[Mesh] = None) -> Callable:
     """Jitted whole-round update for a stacked cohort.
 
     One compiled program runs ``vmap`` over the client axis of ``lax.scan``
@@ -294,6 +350,15 @@ def make_many_update(cfg, strategy, hp: HyperParams, *, downloads: bool,
     Batch pytrees arrive client-major: leaves ``(K, T, B, ...)``, or
     ``(T, B, ...)`` when ``shared_batches`` (then broadcast via in_axes=None
     instead of materializing K copies).
+
+    With ``mesh`` (a 1-D ``("clients",)`` mesh from
+    :func:`repro.sharding.client_mesh`), the vmapped body is wrapped in
+    ``shard_map``: client-stacked arguments are partitioned over the mesh
+    axis (K must divide the device count — the caller pads), the backbone /
+    global adapters / shared batches are replicated, and each device runs
+    its K/D clients with per-client arithmetic identical to the plain vmap
+    path (clients never interact inside a round, so partitioning the client
+    axis is numerics-free).
     """
 
     def one_client(backbone, global_adapters, adapters, opt_state, local,
@@ -349,22 +414,36 @@ def make_many_update(cfg, strategy, hp: HyperParams, *, downloads: bool,
     batch_ax = None if shared_batches else 0
     vm = jax.vmap(one_client,
                   in_axes=(None, None, 0, 0, 0, 0, batch_ax, batch_ax, batch_ax))
+    if mesh is not None:
+        from jax.experimental.shard_map import shard_map
+
+        rep, shd = P(), P(*(a for a in mesh.axis_names))
+        bspec = rep if shared_batches else shd
+        vm = shard_map(
+            vm, mesh=mesh,
+            in_specs=(rep, rep, shd, shd, shd, shd, bspec, bspec, bspec),
+            out_specs=shd, check_rep=False)
     return jax.jit(vm)
 
 
-def _host_stack(trees):
+def _host_stack(trees, *, to_device: bool = True):
     """``tree_stack`` for the host side of the vmap path.
 
     ``jnp.stack`` over K device arrays and per-leaf device ops cost
     O(K·leaves) dispatches — at 10k clients that dwarfs the round itself. On
     the CPU backend ``np.asarray`` of a jax array is a zero-copy view, so
     stacking through numpy is one C-level memcpy + one transfer per leaf.
+
+    ``to_device=False`` keeps the stacked leaves as numpy: the sharded path
+    scatters them straight to the mesh with one ``device_put`` per leaf, so
+    the intermediate copy onto the default device would be pure waste.
     """
     td = jax.tree.structure(trees[0])
     # one batched device_get (single sync) beats per-leaf np.asarray, which
     # pays ~100µs of sync overhead per call — O(K·leaves) of them here
     flat = jax.device_get([jax.tree.flatten(t)[0] for t in trees])
-    leaves = [jnp.asarray(np.stack(col)) for col in zip(*flat)]
+    conv = jnp.asarray if to_device else (lambda x: x)
+    leaves = [conv(np.stack(col)) for col in zip(*flat)]
     return jax.tree.unflatten(td, leaves)
 
 
@@ -379,7 +458,8 @@ def _host_unstack(tree, n: int):
     return [jax.tree.unflatten(td, [h[i] for h in host]) for i in range(n)]
 
 
-def _stack_batch_rows(batch_lists: Sequence[List[Batch]], picks, *, shared: bool):
+def _stack_batch_rows(batch_lists: Sequence[List[Batch]], picks, *,
+                      shared: bool, to_device: bool = True):
     """Stack per-client batch selections into scan xs.
 
     ``picks(batches)`` yields the Batch sequence one client scans over.
@@ -389,32 +469,84 @@ def _stack_batch_rows(batch_lists: Sequence[List[Batch]], picks, *, shared: bool
     """
     if shared:
         row = list(picks(batch_lists[0]))
-        return _host_stack(row) if row else None
+        return _host_stack(row, to_device=to_device) if row else None
     rows = []
     for bl in batch_lists:
         row = list(picks(bl))
         if not row:
             return None
-        rows.append(_host_stack(row))
-    return _host_stack(rows)
+        rows.append(_host_stack(row, to_device=False))
+    return _host_stack(rows, to_device=to_device)
 
 
-def local_update_many(
+@dataclass
+class PreparedCohort:
+    """Host-side product of :func:`prepare_cohort`: stacked (and, under a
+    mesh, padded + device-placed) inputs plus the compiled update fn.
+
+    ``k`` is the number of *real* clients; padded rows (``pad_to`` under a
+    mesh) duplicate the last real client and are sliced off in
+    :func:`collect_cohort` before any state, metric, or byte accounting
+    sees them.
+    """
+
+    states: List[ClientState]
+    k: int
+    fn: Callable
+    args: tuple                  # (adapters0, opt0, local0, lopt0, xs...)
+    has_local: bool
+    warmup: bool
+    train_t: int
+    wants_fisher: Optional[str]
+    mesh: Optional[Mesh] = None
+
+
+@dataclass
+class LaunchedCohort:
+    """An in-flight cohort dispatch: outputs are jax async futures, so the
+    host is free to prepare the next cohort while devices compute."""
+
+    prepared: PreparedCohort
+    outs: tuple
+
+
+def prepare_cohort(
     cfg,
-    backbone,
     states: List[ClientState],
     batch_lists: Sequence[List[Batch]],
     hp: HyperParams,
     strategy,
-    global_adapters,
-) -> Tuple[List[ClientState], List[Dict]]:
-    """Vectorized ``local_update`` over a homogeneous cohort.
+    *,
+    mesh: Optional[Mesh] = None,
+    pad_to: Optional[int] = None,
+    opt0_override=None,
+    batches_override=None,
+) -> PreparedCohort:
+    """Validate + stack a homogeneous cohort (the host half of a dispatch).
 
     All clients must share the same scheduling flags this round (the engine
     groups cohorts by ``downloads_global``/``local_warmup``), the same batch
     shapes, and the same warmup/Fisher batch counts; heterogeneous cohorts
     raise ``ValueError`` (fall back to ``engine="sequential"``).
+
+    With ``mesh`` the stacked leaves are placed with a
+    ``NamedSharding(mesh, P("clients"))`` along the client axis; the cohort
+    is padded up to ``pad_to`` (default: the next multiple of the mesh size)
+    by repeating the last client's row. Padding rows compute and are
+    discarded — they are never returned, never aggregated, never counted.
+
+    ``opt0_override`` supplies the stacked AdamW state directly (an already
+    padded, already device-placed tree — normally last round's ``new_opt``
+    output for the identical chunk), skipping the host stack + transfer.
+    The caller owns the invariant that it matches these clients' true
+    current optimizer state; see the engine's chunk-resident opt cache.
+
+    ``batches_override`` likewise supplies an already stacked + placed
+    ``(train_xs, warm_xs, fish_xs)`` triple for this exact cohort — client
+    batch lists are immutable within a run, so the engine reuses the placed
+    stacks across rounds instead of re-stacking identical data every round.
     """
+    from repro.sharding import CLIENT_AXIS, pad_to_multiple
     from repro.strategies.base import get_strategy
 
     strategy = get_strategy(strategy)
@@ -434,6 +566,20 @@ def local_update_many(
                 "local_update_many needs a cohort with uniform download/"
                 "warmup schedules; group clients by these flags first")
 
+    real_states, real_lists = states, list(batch_lists)
+    if mesh is not None:
+        nd = mesh.size
+        width = pad_to if pad_to is not None else pad_to_multiple(k, nd)
+        if width % nd != 0:
+            raise ValueError(
+                f"pad_to={width} must be a multiple of the mesh size {nd}")
+        if width < k:
+            raise ValueError(f"pad_to={width} is smaller than the cohort ({k})")
+        pad = width - k
+        states = states + [states[-1]] * pad
+        batch_lists = list(batch_lists) + [batch_lists[-1]] * pad
+    del real_states, real_lists
+
     warm_ts = {min(len(bl), hp.local_steps) for bl in batch_lists} if warmup else {0}
     fish_ts = ({min(len(bl), hp.fisher_batches) for bl in batch_lists}
                if strategy.wants_fisher == "dedicated" else {0})
@@ -445,69 +591,208 @@ def local_update_many(
     train_t = hp.local_steps
 
     shared = all(bl is batch_lists[0] for bl in batch_lists)
-    try:
-        train_xs = _stack_batch_rows(
-            batch_lists, lambda bl: (bl[t % len(bl)] for t in range(train_t)),
-            shared=shared)
-        warm_xs = _stack_batch_rows(
-            batch_lists, lambda bl: bl[:warm_t], shared=shared) if warmup else None
-        fish_xs = _stack_batch_rows(
-            batch_lists, lambda bl: bl[:fish_t], shared=shared) if fish_t else None
-    except ValueError as e:  # jnp.stack shape mismatch
-        raise ValueError(
-            "local_update_many needs identical batch shapes across the "
-            f"cohort ({e}); use engine='sequential' for ragged shards") from e
+    # under a mesh the stacked leaves go straight from numpy to their mesh
+    # shards (one device_put below); staging them on the default device
+    # first would pay a second full copy of the cohort
+    to_dev = mesh is None
+    if batches_override is not None:
+        train_xs, warm_xs, fish_xs = batches_override
+    else:
+        try:
+            train_xs = _stack_batch_rows(
+                batch_lists, lambda bl: (bl[t % len(bl)] for t in range(train_t)),
+                shared=shared, to_device=to_dev)
+            warm_xs = _stack_batch_rows(
+                batch_lists, lambda bl: bl[:warm_t], shared=shared,
+                to_device=to_dev) if warmup else None
+            fish_xs = _stack_batch_rows(
+                batch_lists, lambda bl: bl[:fish_t], shared=shared,
+                to_device=to_dev) if fish_t else None
+        except ValueError as e:  # jnp.stack shape mismatch
+            raise ValueError(
+                "local_update_many needs identical batch shapes across the "
+                f"cohort ({e}); use engine='sequential' for ragged shards") from e
     if train_t > 0 and train_xs is None:
         raise ValueError("clients with no training batches cannot run local steps")
 
     adapters0 = (None if downloads
-                 else _host_stack([s.adapters for s in states]))
-    opt0 = _host_stack([s.opt_state for s in states])
-    local0 = (_host_stack([s.local_adapters for s in states])
+                 else _host_stack([s.adapters for s in states], to_device=to_dev))
+    opt0 = (opt0_override if opt0_override is not None
+            else _host_stack([s.opt_state for s in states], to_device=to_dev))
+    local0 = (_host_stack([s.local_adapters for s in states], to_device=to_dev)
               if has_local else None)
     lopt0 = None
     if warmup:
         lopt0 = _host_stack([
             s.local_opt_state if s.local_opt_state is not None
             else adamw_init(s.local_adapters) for s in states
-        ])
+        ], to_device=to_dev)
+
+    if mesh is not None:
+        # direct host->device scatter per shard: each device receives only
+        # its K/D client rows (replicated args are placed at launch)
+        shd = NamedSharding(mesh, P(CLIENT_AXIS))
+        rep = NamedSharding(mesh, P())
+        bshard = rep if shared else shd
+        adapters0 = jax.device_put(adapters0, shd) if adapters0 is not None else None
+        if opt0_override is None:  # an override is already mesh-placed
+            opt0 = jax.device_put(opt0, shd)
+        local0 = jax.device_put(local0, shd) if local0 is not None else None
+        lopt0 = jax.device_put(lopt0, shd) if lopt0 is not None else None
+        if batches_override is None:
+            train_xs = (jax.device_put(train_xs, bshard)
+                        if train_xs is not None else None)
+            warm_xs = (jax.device_put(warm_xs, bshard)
+                       if warm_xs is not None else None)
+            fish_xs = (jax.device_put(fish_xs, bshard)
+                       if fish_xs is not None else None)
 
     fn = make_many_update(
         cfg, strategy, hp, downloads=downloads, warmup=warmup,
         has_local=has_local, train_t=train_t, warm_t=warm_t, fish_t=fish_t,
-        shared_batches=shared)
-    new_adp, new_opt, new_local, new_lopt, fishers, losses = fn(
-        backbone, global_adapters, adapters0, opt0, local0, lopt0,
-        train_xs, warm_xs, fish_xs)
+        shared_batches=shared, mesh=mesh)
+    return PreparedCohort(
+        states=states[:k], k=k, fn=fn,
+        args=(adapters0, opt0, local0, lopt0, train_xs, warm_xs, fish_xs),
+        has_local=has_local, warmup=warmup, train_t=train_t,
+        wants_fisher=strategy.wants_fisher, mesh=mesh)
+
+
+def launch_cohort(prepared: PreparedCohort, backbone, global_adapters) -> LaunchedCohort:
+    """Dispatch a prepared cohort. Returns immediately (async futures): the
+    caller may overlap host work with device compute before collecting.
+
+    Under a mesh, ``backbone`` / ``global_adapters`` should already be
+    replicated over the mesh (the engine places them once per run/round);
+    ``device_put`` below is then a no-op, and otherwise pays one broadcast.
+    """
+    if prepared.mesh is not None:
+        rep = NamedSharding(prepared.mesh, P())
+        backbone = jax.device_put(backbone, rep)
+        global_adapters = jax.device_put(global_adapters, rep)
+    adapters0, opt0, local0, lopt0, train_xs, warm_xs, fish_xs = prepared.args
+    outs = prepared.fn(backbone, global_adapters, adapters0, opt0, local0,
+                       lopt0, train_xs, warm_xs, fish_xs)
+    return LaunchedCohort(prepared=prepared, outs=outs)
+
+
+def collect_cohort(launched: LaunchedCohort, *, with_opt: bool = True,
+                   ) -> Tuple[List[ClientState], List[Dict]]:
+    """Block on a launched cohort and rebuild per-client states + metrics.
+
+    Only the first ``k`` (real) rows are unstacked — under a mesh the
+    padded tail rows never leave this function.
+
+    ``with_opt=False`` skips the device→host gather of the AdamW state: the
+    returned states keep their (now stale) previous ``opt_state``, and the
+    caller takes ownership of ``launched.outs[1]`` — the stacked new opt
+    tree, still on the devices — materializing rows only when a per-client
+    value is actually needed (checkpointing, cohort reshuffle, run end).
+    """
+    p = launched.prepared
+    k = p.k
+    new_adp, new_opt, new_local, new_lopt, fishers, losses = launched.outs
 
     adp_list = _host_unstack(new_adp, k)
-    opt_list = _host_unstack(new_opt, k)
-    local_list = _host_unstack(new_local, k) if has_local else [None] * k
-    lopt_list = _host_unstack(new_lopt, k) if warmup else [None] * k
+    opt_list = _host_unstack(new_opt, k) if with_opt else None
+    local_list = _host_unstack(new_local, k) if p.has_local else [None] * k
+    lopt_list = _host_unstack(new_lopt, k) if p.warmup else [None] * k
     fisher_list = (_host_unstack(fishers, k)
-                   if strategy.wants_fisher is not None else [None] * k)
+                   if p.wants_fisher is not None else [None] * k)
 
-    losses_np = np.asarray(losses) if train_t > 0 else np.zeros((k, 0), np.float32)
+    losses_np = (np.asarray(losses)[:k] if p.train_t > 0
+                 else np.zeros((k, 0), np.float32))
     new_states, metrics = [], []
-    for i, s in enumerate(states):
+    for i, s in enumerate(p.states):
         new_states.append(dataclasses.replace(
             s,
             adapters=adp_list[i],
-            opt_state=opt_list[i],
-            local_adapters=local_list[i] if has_local else s.local_adapters,
-            local_opt_state=lopt_list[i] if warmup else s.local_opt_state,
+            opt_state=opt_list[i] if with_opt else s.opt_state,
+            local_adapters=local_list[i] if p.has_local else s.local_adapters,
+            local_opt_state=lopt_list[i] if p.warmup else s.local_opt_state,
             fisher=fisher_list[i],
             rounds_participated=s.rounds_participated + 1,
         ))
-        # identical arithmetic to the sequential path: python floats, summed
-        # in step order, so seeded metrics match bit-for-bit
-        ls = [float(x) for x in losses_np[i]]
+    return new_states, _loss_metrics(losses_np)
+
+
+def _loss_metrics(losses_np) -> List[Dict]:
+    """Per-client loss metrics from a (k, T) host array — identical
+    arithmetic to the sequential path: python floats, summed in step order,
+    so seeded metrics match bit-for-bit."""
+    metrics = []
+    for row in losses_np:
+        ls = [float(x) for x in row]
         if ls:
             metrics.append({"loss_first": ls[0], "loss_last": ls[-1],
                             "loss_mean": sum(ls) / len(ls)})
         else:
-            metrics.append({"loss_first": 0.0, "loss_last": 0.0, "loss_mean": 0.0})
-    return new_states, metrics
+            metrics.append({"loss_first": 0.0, "loss_last": 0.0,
+                            "loss_mean": 0.0})
+    return metrics
+
+
+def collect_cohort_deferred(launched: LaunchedCohort,
+                            ) -> Tuple[List[ClientState], Optional[jax.Array]]:
+    """Collect only participation counts from a launched cohort; nothing is
+    pulled off the devices.
+
+    The adapter / optimizer / Fisher outputs stay stacked on the devices —
+    the caller takes ownership of ``launched.outs`` (the sharded engine
+    parks them in its chunk-resident cache and folds them straight into the
+    stacked aggregation hooks). The second return value is the still-device
+    ``(width, T)`` losses array (or None with no train steps): the engine
+    gathers every chunk's losses in ONE batched ``device_get`` at round end
+    (via :func:`loss_metrics_deferred`) instead of paying a cross-device
+    sync per chunk. Returned states keep their previous (now stale)
+    ``adapters``/``opt_state``/``fisher`` until the engine materializes the
+    resident rows.
+    """
+    p = launched.prepared
+    new_states = [
+        dataclasses.replace(s, rounds_participated=s.rounds_participated + 1)
+        for s in p.states
+    ]
+    return new_states, (launched.outs[5] if p.train_t > 0 else None)
+
+
+def loss_metrics_deferred(loss_arrays, ks) -> List[List[Dict]]:
+    """One batched gather of many chunks' device losses → per-chunk metric
+    lists (same arithmetic as :func:`_loss_metrics`). ``ks`` holds each
+    chunk's real (unpadded) client count; ``None`` entries (no train steps)
+    yield zero-loss metrics."""
+    gathered = jax.device_get([a for a in loss_arrays if a is not None])
+    it = iter(gathered)
+    out = []
+    for a, k in zip(loss_arrays, ks):
+        rows = (np.asarray(next(it))[:k] if a is not None
+                else np.zeros((k, 0), np.float32))
+        out.append(_loss_metrics(rows))
+    return out
+
+
+def local_update_many(
+    cfg,
+    backbone,
+    states: List[ClientState],
+    batch_lists: Sequence[List[Batch]],
+    hp: HyperParams,
+    strategy,
+    global_adapters,
+    *,
+    mesh: Optional[Mesh] = None,
+    pad_to: Optional[int] = None,
+) -> Tuple[List[ClientState], List[Dict]]:
+    """Vectorized ``local_update`` over a homogeneous cohort.
+
+    The fused prepare → launch → collect path (see the module docstring for
+    the pipelined variant the sharded engine uses). ``mesh`` partitions the
+    stacked cohort over a ``("clients",)`` device mesh via ``shard_map``,
+    padding to ``pad_to`` rows (default: next multiple of the mesh size).
+    """
+    prepared = prepare_cohort(cfg, states, batch_lists, hp, strategy,
+                              mesh=mesh, pad_to=pad_to)
+    return collect_cohort(launch_cohort(prepared, backbone, global_adapters))
 
 
 @functools.lru_cache(maxsize=64)

@@ -14,7 +14,7 @@ Methods are plugins (``repro.strategies``): the engine never branches on a
 strategy name. Strings like ``strategy="fednano"`` resolve through the
 registry, so the legacy API keeps working.
 
-Three execution engines share those hooks:
+Four execution engines share those hooks:
 
   * ``engine="sequential"`` — one client at a time, a Python loop of jitted
     steps. Reference semantics; handles ragged per-client data.
@@ -26,11 +26,33 @@ Three execution engines share those hooks:
     is processed in chunks of ``c`` and folded into a running merge through
     the strategy's ``agg_stream_*`` hooks, so server memory is O(c) in the
     cohort size.
+  * ``engine="sharded"`` — the vmap layout partitioned over a 1-D
+    ``("clients",)`` device mesh (``repro.sharding.client_mesh``): the same
+    stacked cohorts are wrapped in ``shard_map`` so each of D devices runs
+    K/D clients in parallel with unchanged per-client arithmetic (seeded
+    metrics match ``engine="vmap"``). Cohorts that don't divide D are
+    padded by repeating the last client's row; padding rows never reach
+    aggregation, metrics, or comm accounting. With ``overlap=True`` the
+    engine keeps a two-deep dispatch pipeline — host-side stack/unstack of
+    cohort k+1 overlaps device compute of cohort k (JAX dispatch is async;
+    the blocking ``device_get`` happens one cohort late). Cohorts are
+    dispatched in cache-sized chunks (width ≤ ``_CHUNK_WIDTH_CAP``), chunk
+    state stays device-resident across rounds (stacked outputs feed the
+    next round's dispatch directly; ``materialize`` writes true rows back
+    before checkpoints, reshuffles, or run end), placed batch stacks are
+    cached per chunk, and — when every upload is the raw adapter tree —
+    aggregation runs device-side: all chunk outputs fold into the merge in
+    one fused dispatch per round (padding rows zero-weighted), with losses
+    gathered in a single batched ``device_get``.
   * ``engine="buffered"`` — FedBuff-style async simulation: clients run
     against the global version they last downloaded, a completion-ordered
     event loop fills a server buffer, and every ``buffer_size`` arrivals are
     merged with staleness-discounted weights n_k/(1+τ)^p. Stragglers delay
-    only their own upload, never the round.
+    only their own upload, never the round. ``failures=`` draws are wired
+    into each dispatch attempt: dropped clients never enqueue an upload,
+    crashed clients lose their local progress, stragglers complete with
+    extra staleness — all counted per merge in round metrics and carried in
+    checkpoints so resume-replay stays deterministic.
 
 Fault tolerance rides on the same loop: ``checkpoint_dir`` periodically
 snapshots the *entire* round state (``repro.checkpoint.RunState``: θ_global,
@@ -46,11 +68,14 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import os
+import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Union
 
 import jax
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.checkpoint import (
     BufferedState,
@@ -78,7 +103,20 @@ from repro.strategies.transforms import (
 )
 from repro.utils import tree_bytes
 
-ENGINES = ("sequential", "vmap", "buffered")
+ENGINES = ("sequential", "vmap", "sharded", "buffered")
+
+# without agg_chunk, the sharded engine splits each flag-group into at least
+# this many dispatch chunks (rounded up to a multiple of the mesh size) so
+# the double buffer has successive launches to overlap — and caps the chunk
+# width at _CHUNK_WIDTH_CAP so each dispatch's working set stays cache-sized
+# no matter how large the cohort grows (empirically the larger lever on CPU
+# meshes: the per-1k-clients step cost is flat for widths 32–128 and ~35%
+# worse by width 256, so a 10k cohort runs as ~80 width-128 chunks rather
+# than 16 width-632 ones); dispatch width never changes aggregation
+# numerics — offers are buffered per client and folded at agg_chunk
+# boundaries regardless of how cohorts were batched on device
+_PIPELINE_CHUNKS = 16
+_CHUNK_WIDTH_CAP = 128
 
 # buffered-engine event kinds: RUN completes a local update; RETRY is a
 # failed attempt (dropout/crash) coming back for re-dispatch
@@ -99,6 +137,8 @@ class FederatedResult:
     server_opt_state: Optional[object] = None  # final ServerOpt moments
                                                # (checkpointable; see
                                                # save_server_checkpoint)
+    setup_s: float = 0.0          # wall seconds spent initializing clients
+                                  # (batched vs per-client; engine_bench rows)
 
 
 class _Checkpointer:
@@ -129,8 +169,11 @@ class _Checkpointer:
             "failure_model": failures.to_dict() if failures is not None else None,
         }
 
+    def would_save(self, n: int) -> bool:
+        return self.every > 0 and n > self._last and n % self.every == 0
+
     def maybe_save(self, n: int, **kw) -> None:
-        if self.every > 0 and n > self._last and n % self.every == 0:
+        if self.would_save(n):
             self.save(n, **kw)
 
     def final_save(self, n: int, **kw) -> None:
@@ -228,6 +271,8 @@ def run_federated(
     sampler: Optional[ClientSampler] = None,
     engine: str = "sequential",
     agg_chunk: Optional[int] = None,
+    devices: Optional[int] = None,
+    overlap: bool = True,
     buffer_size: Optional[int] = None,
     staleness_power: float = 0.5,
     latency_fn: Optional[Callable[[int, int], int]] = None,
@@ -244,7 +289,12 @@ def run_federated(
     ``sampler`` defaults to full participation. ``engine`` picks the
     execution path (see module docstring); ``agg_chunk`` bounds server-side
     aggregation memory by folding cohort chunks through the strategy's
-    streaming-merge hooks. ``buffer_size`` / ``staleness_power`` /
+    streaming-merge hooks. ``devices`` (sharded engine only) caps the mesh
+    at the first N local devices (default: all — on CPU force a topology
+    with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``);
+    ``overlap=False`` disables the sharded engine's two-deep
+    prepare/compute double buffer (for benchmarking the overlap win).
+    ``buffer_size`` / ``staleness_power`` /
     ``latency_fn(cid, version) -> int`` configure the buffered async engine
     (``rounds`` then counts server merges, not synchronized rounds).
     ``final_eval=False`` skips the end-of-run accuracy pass (benchmarks
@@ -260,6 +310,13 @@ def run_federated(
     """
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; choose from {ENGINES}")
+    if devices is not None and engine != "sharded":
+        raise ValueError("devices= only applies to engine='sharded'")
+    mesh = None
+    if engine == "sharded":
+        from repro.sharding import client_mesh
+
+        mesh = client_mesh(devices)
     strat = get_strategy(strategy)
     if transforms is None:
         transforms = default_transforms(hp)
@@ -274,10 +331,13 @@ def run_federated(
     cids = sorted(train_data)
     index_of = {cid: i for i, cid in enumerate(cids)}
     ckeys = jax.random.split(k_clients, len(cids))
-    clients = [
-        strat.init_client(ck, cfg, cid, n_examples=len(train_data[cid]))
-        for ck, cid in zip(ckeys, cids)
-    ]
+    t0 = time.perf_counter()
+    # batched vmapped init when the strategy uses the stock client layout;
+    # bit-identical to the per-client loop (counter-based PRNG), which
+    # strategies with custom/ragged state fall back to automatically
+    clients = strat.init_clients(
+        ckeys, cfg, cids, [len(train_data[cid]) for cid in cids])
+    setup_s = time.perf_counter() - t0
     tstates = {cid: [None] * len(transforms) for cid in cids}
 
     resume_state = None
@@ -322,8 +382,9 @@ def run_federated(
             transforms, tstates, server_opt, sampler, rounds=rounds,
             engine=engine, agg_chunk=agg_chunk, use_pallas=use_pallas,
             verbose=verbose, failures=failures, ckpt=ckpt,
-            resume_state=resume_state,
+            resume_state=resume_state, mesh=mesh, overlap=overlap,
         )
+    result.setup_s = setup_s
 
     # final evaluation: every client, on the params its strategy designates
     # (global adapters for most; LocFT/FedDPA-F evaluate personalized params).
@@ -350,8 +411,9 @@ def _run_sync(
     cfg, server, strat, clients, cids, index_of, train_data, hp,
     transforms, tstates, server_opt, sampler, *, rounds, engine, agg_chunk,
     use_pallas, verbose, failures=None, ckpt=None, resume_state=None,
+    mesh=None, overlap=True,
 ):
-    """Synchronized rounds: ``engine`` is "sequential" or "vmap"."""
+    """Synchronized rounds: ``engine`` is "sequential", "vmap" or "sharded"."""
     streaming = bool(agg_chunk) and strat.aggregates
     opt_state = server_opt.init(server.global_adapters) if server_opt else None
     result = FederatedResult(strategy=strat.name, engine=engine)
@@ -361,6 +423,52 @@ def _run_sync(
         if resume_state.server_opt_state is not None:
             opt_state = resume_state.server_opt_state
         result.round_metrics = list(resume_state.round_metrics)
+
+    backbone_dev = server.backbone
+    if mesh is not None:
+        # replicate the frozen backbone over the mesh once for the whole run;
+        # the (changing) global adapters are re-placed at each round start
+        _rep = NamedSharding(mesh, PartitionSpec())
+        backbone_dev = jax.device_put(server.backbone, _rep)
+
+    # chunk-resident client state (sharded engine): a chunk's stacked AdamW
+    # state — and, in rounds that qualify for device-side stacked
+    # aggregation, its adapters and Fisher diagonals too — never leaves the
+    # devices between rounds. Last round's stacked outputs feed the next
+    # round's dispatch (and the aggregation folds) directly, skipping the
+    # per-round device→host gather and host→device restack. The matching
+    # ``ClientState`` fields go stale while a cid has an entry in ``home``;
+    # ``materialize`` writes the true rows back before anything reads them
+    # (checkpoint snapshots, a reshuffled cohort, run end).
+    resident: Dict[tuple, dict] = {}   # chunk key -> {k, opt, adp, fish}
+    home: Dict[int, tuple] = {}        # cid -> chunk key holding its rows
+    # client batch lists are immutable within a run, so a chunk's stacked +
+    # mesh-placed (train, warm, fisher) batches are identical every round it
+    # reappears — cache them keyed by the exact chunk membership
+    batch_cache: Dict[tuple, tuple] = {}
+
+    def materialize(cids_needed=None):
+        keys = ({home[c] for c in cids_needed if c in home}
+                if cids_needed is not None else set(home.values()))
+        for ck in keys:
+            ent = resident[ck]
+            kk = ent["k"]
+            opt_rows = client_lib._host_unstack(ent["opt"], kk)
+            adp_rows = (client_lib._host_unstack(ent["adp"], kk)
+                        if ent["adp"] is not None else None)
+            fish_rows = (client_lib._host_unstack(ent["fish"], kk)
+                         if ent["fish"] is not None else None)
+            for j, c in enumerate(ck):
+                if home.get(c) != ck:
+                    continue
+                fields = {"opt_state": opt_rows[j]}
+                if adp_rows is not None:
+                    fields["adapters"] = adp_rows[j]
+                if fish_rows is not None:
+                    fields["fisher"] = fish_rows[j]
+                clients[index_of[c]] = dataclasses.replace(
+                    clients[index_of[c]], **fields)
+                del home[c]
 
     for r in range(start_round, rounds):
         cohort = list(sampler.select(r, cids))
@@ -393,6 +501,15 @@ def _run_sync(
         stream_buf: List[tuple] = []
         stream_bytes = {"param_up": 0, "fisher_up": 0}
         folded_any = False
+        # device-side stacked aggregation (sharded engine fast path): chunk
+        # outputs fold into the merge where they live, padding rows masked
+        # with zero weight — no per-client upload tree ever exists. Folds
+        # are deferred to one fused dispatch at round end (the stacks stay
+        # device-resident regardless, so deferral costs no extra memory).
+        fast_acc = None
+        fast_pend: List[tuple] = []    # (theta_stack, fisher_stack, weights)
+        fast_losses: List[tuple] = []  # (chunk, device losses, real k)
+        fast_bytes = {"param_up": 0, "fisher_up": 0}
 
         def apply_transforms(cid: int, theta):
             ctx = TransformCtx(cid=cid, round_idx=r)
@@ -443,7 +560,7 @@ def _run_sync(
                     strat, server.global_adapters, round_idx=r,
                 )
                 offer(cid, clients[i], metrics["loss_mean"])
-        else:  # engine == "vmap": group cohort by scheduling flags, then batch
+        else:  # engine "vmap"/"sharded": group cohort by flags, then batch
             groups: Dict[tuple, List[int]] = {}
             for cid in cohort:
                 st = clients[index_of[cid]]
@@ -453,27 +570,179 @@ def _run_sync(
                     st.local_adapters is not None and strat.local_warmup(p, hp),
                 )
                 groups.setdefault(flags, []).append(cid)
+
+            global_dev = server.global_adapters
+            if mesh is not None:
+                global_dev = jax.device_put(
+                    server.global_adapters, NamedSharding(mesh, PartitionSpec()))
+
+            # dispatch plan: (downloads, chunk) across all flag-groups. The
+            # dispatch width never changes aggregation numerics (offers are
+            # replayed per client, in plan order, and streamed folds trigger
+            # at agg_chunk boundaries only), so the sharded engine is free
+            # to split groups into pipeline-sized, mesh-aligned chunks.
+            plan: List[tuple] = []
+            for (downloads, _), gcids in groups.items():
+                if mesh is None:
+                    width = agg_chunk if agg_chunk else len(gcids)
+                else:
+                    from repro.sharding import pad_to_multiple
+
+                    width = (agg_chunk if agg_chunk
+                             else min(_CHUNK_WIDTH_CAP,
+                                      max(1, -(-len(gcids) // _PIPELINE_CHUNKS))))
+                    width = pad_to_multiple(width, mesh.size)
+                for chunk in _chunks(gcids, width):
+                    plan.append((downloads, chunk))
+
+            # device-side aggregation applies when every upload is the raw
+            # adapter tree (stock post_local_update, no wire transforms, no
+            # dual-adapter rows) and every chunk re-downloads the global —
+            # then the stacked outputs ARE the uploads, and the fold can run
+            # on the mesh with pad rows zero-weighted. Anything fancier
+            # falls back to the per-client offer path below.
+            fast_agg = (
+                mesh is not None and strat.aggregates and not use_pallas
+                and not transforms
+                and type(strat).post_local_update is Strategy.post_local_update
+                and all(flags[0] for flags in groups)
+                and not any(
+                    clients[index_of[gcids[0]]].local_adapters is not None
+                    for gcids in groups.values())
+            )
+
             # non-streaming aggregation must see cohort order; buffer per-cid
             pending: Dict[int, tuple] = {}
-            for (downloads, _), gcids in groups.items():
-                width = agg_chunk if agg_chunk else len(gcids)
-                for chunk in _chunks(gcids, width):
-                    idxs = [index_of[c] for c in chunk]
-                    new_states, mets = client_lib.local_update_many(
-                        cfg, server.backbone, [clients[i] for i in idxs],
-                        [train_data[c] for c in chunk], hp, strat,
-                        server.global_adapters,
-                    )
-                    if downloads:
-                        down_bytes += gbytes * len(chunk)
-                    for c, i, ns, m in zip(chunk, idxs, new_states, mets):
-                        clients[i] = ns
+            # two-deep double buffer (sharded + overlap): while cohort k
+            # computes on the devices, the host stacks and launches k+1 —
+            # collect_cohort's device_get is the only blocking point, and it
+            # always trails the most recent launch by one chunk
+            depth = 2 if (mesh is not None and overlap) else 1
+            inflight: deque = deque()
+
+            def collect_one():
+                nonlocal down_bytes, wire_up
+                downloads, chunk, launched = inflight.popleft()
+                kc = len(chunk)
+                if fast_agg:
+                    # nothing leaves the devices here: adapters/opt/fisher
+                    # queue for the round-end fused stacked merge, losses
+                    # for one round-end batched gather
+                    new_states, loss_dev = client_lib.collect_cohort_deferred(
+                        launched)
+                    outs = launched.outs
+                    wants_f = launched.prepared.wants_fisher is not None
+                    ck = tuple(chunk)
+                    resident[ck] = {"k": kc, "opt": outs[1], "adp": outs[0],
+                                    "fish": outs[4] if wants_f else None}
+                    for c in chunk:
+                        home[c] = ck
+                    width = jax.tree_util.tree_leaves(outs[0])[0].shape[0]
+                    weights = [float(clients[index_of[c]].n_examples)
+                               for c in chunk] + [0.0] * (width - kc)
+                    fast_pend.append(
+                        (outs[0], outs[4] if wants_f else None, weights))
+                    row_pb = tree_bytes(outs[0]) // width
+                    fast_bytes["param_up"] += row_pb * kc
+                    wire_up += row_pb * kc
+                    if wants_f:
+                        fast_bytes["fisher_up"] += (
+                            tree_bytes(outs[4]) // width) * kc
+                elif mesh is not None:
+                    # keep the new opt tree on the devices; per-client
+                    # opt_state goes stale until materialize
+                    new_states, mets = client_lib.collect_cohort(
+                        launched, with_opt=False)
+                    ck = tuple(chunk)
+                    resident[ck] = {"k": kc, "opt": launched.outs[1],
+                                    "adp": None, "fish": None}
+                    for c in chunk:
+                        home[c] = ck
+                else:
+                    new_states, mets = client_lib.collect_cohort(launched)
+                if downloads:
+                    down_bytes += gbytes * kc
+                if fast_agg:
+                    for c, ns in zip(chunk, new_states):
+                        clients[index_of[c]] = ns
+                    fast_losses.append((chunk, loss_dev, kc))
+                    return
+                for c, ns, m in zip(chunk, new_states, mets):
+                    clients[index_of[c]] = ns
+                    pending[c] = m["loss_mean"]
+                    offer(c, ns, m["loss_mean"])
+
+            for downloads, chunk in plan:
+                opt0 = bx = None
+                if mesh is not None:
+                    ck = tuple(chunk)
+                    bx = batch_cache.get(ck)
+                    if (all(home.get(c) == ck for c in chunk)
+                            and (downloads or resident[ck]["adp"] is None)):
+                        opt0 = resident[ck]["opt"]
+                    else:
+                        # cohort reshuffled (or stale adapters would be
+                        # stacked): pull resident rows back to their
+                        # ClientStates before stacking from the host
+                        needs = [c for c in chunk if c in home]
+                        if needs:
+                            materialize(needs)
+                idxs = [index_of[c] for c in chunk]
+                prepared = client_lib.prepare_cohort(
+                    cfg, [clients[i] for i in idxs],
+                    [train_data[c] for c in chunk], hp, strat, mesh=mesh,
+                    opt0_override=opt0, batches_override=bx)
+                if mesh is not None and bx is None:
+                    batch_cache[ck] = prepared.args[4:7]
+                inflight.append((downloads, chunk, client_lib.launch_cohort(
+                    prepared, backbone_dev, global_dev)))
+                if len(inflight) >= depth:
+                    collect_one()
+            while inflight:
+                collect_one()
+            # drop resident chunks no cid points at anymore (reshuffles),
+            # and cached batch stacks for chunk keys this round didn't use
+            if resident:
+                live = set(home.values())
+                for ck in [k for k in resident if k not in live]:
+                    del resident[ck]
+            if batch_cache:
+                used = {tuple(chunk) for _, chunk in plan}
+                for ck in [k for k in batch_cache if k not in used]:
+                    del batch_cache[ck]
+            if fast_losses:
+                all_mets = client_lib.loss_metrics_deferred(
+                    [l for _, l, _ in fast_losses],
+                    [kk for _, _, kk in fast_losses])
+                for (chunk, _, _), mets in zip(fast_losses, all_mets):
+                    for c, m in zip(chunk, mets):
                         pending[c] = m["loss_mean"]
-                        offer(c, ns, m["loss_mean"])
             # keep round metrics in cohort order regardless of grouping
             losses = [pending[c] for c in cohort if c in pending]
 
-        if strat.aggregates and (updates or stream_buf or folded_any):
+        if fast_pend:
+            fast_acc = strat.agg_stream_fold_stacked(
+                None, [p[0] for p in fast_pend],
+                [p[1] for p in fast_pend], [p[2] for p in fast_pend],
+                use_pallas=use_pallas)
+        if fast_acc is not None:
+            # device-side stacked merge: finalize where the folds ran, then
+            # commit with byte totals identical to the per-client path
+            # (k identical rows ⇒ k·row_bytes)
+            prev_global = server.global_adapters
+            merged = strat.agg_stream_finalize(fast_acc, use_pallas=use_pallas)
+            server = server_lib.server_commit(
+                server, merged,
+                param_up=fast_bytes["param_up"],
+                fisher_up=fast_bytes["fisher_up"],
+                param_down=down_bytes, wire_up=wire_up,
+            )
+            if server_opt is not None:
+                new_global, opt_state = server_opt.apply(
+                    opt_state, prev_global, server.global_adapters
+                )
+                server = dataclasses.replace(server, global_adapters=new_global)
+        elif strat.aggregates and (updates or stream_buf or folded_any):
             prev_global = server.global_adapters
             if streaming:
                 fold_stream()
@@ -519,10 +788,14 @@ def _run_sync(
             print(f"  [{strat.name}] round {r}: {shown}")
 
         if ckpt is not None:
+            if home and ckpt.would_save(r + 1):
+                materialize()  # snapshots need true per-client state rows
             ckpt.maybe_save(r + 1, server=server, clients=clients,
                             tstates=tstates, opt_state=opt_state,
                             metrics=result.round_metrics)
 
+    if home:
+        materialize()
     if ckpt is not None:
         ckpt.final_save(rounds, server=server, clients=clients,
                         tstates=tstates, opt_state=opt_state,
@@ -577,12 +850,17 @@ def _run_buffered(
     snapshots: Dict[int, list] = {version: [server.global_adapters, 0]}
     events: List[tuple] = []  # (finish_tick, cid, version_started, kind)
     merges = 0
-    acc_up = {"param_up": 0, "fisher_up": 0, "wire_up": 0, "down": 0}
+    # per-merge accumulators; the failure counters ride in the same dict so
+    # checkpoints carry them and resume-replay reports identical metrics
+    acc_up = {"param_up": 0, "fisher_up": 0, "wire_up": 0, "down": 0,
+              "dropped": 0, "crashed": 0, "straggled": 0}
     buffer: List[tuple] = []  # (theta, fisher, size, loss_mean, staleness)
 
     def dispatch(cid: int, now: int):
         if failures is not None and failures.drops(cid, now):
-            # offline this tick: no download, no snapshot pin; retry next tick
+            # offline this tick: no download, no snapshot pin, nothing ever
+            # enqueued for upload; retry next tick
+            acc_up["dropped"] += 1
             heapq.heappush(events, (now + 1, cid, version, _EV_RETRY))
             return
         st = clients[index_of[cid]]
@@ -590,10 +868,15 @@ def _run_buffered(
             acc_up["down"] += gbytes
         lat = max(1, int(latency_fn(cid, version)))
         if failures is not None and failures.straggles(cid, now):
+            # slow attempt: completes, but ``straggler_ticks`` later — by
+            # then the server has merged more versions, so this upload lands
+            # with extra staleness and takes the n/(1+τ)^p discount
+            acc_up["straggled"] += 1
             lat += failures.straggler_ticks
         if failures is not None and failures.crashes(cid, now):
             # downloaded, then died mid-update: the broadcast crossed the
             # wire but nothing comes back and no snapshot stays pinned
+            acc_up["crashed"] += 1
             heapq.heappush(events, (now + lat, cid, version, _EV_RETRY))
             return
         snapshots[version][1] += 1
@@ -612,6 +895,8 @@ def _run_buffered(
         events = list(b.events)  # a valid heap, restored verbatim
         buffer = list(b.buffer)
         acc_up = dict(b.acc_up)
+        for k in ("dropped", "crashed", "straggled"):
+            acc_up.setdefault(k, 0)  # pre-failure-counter checkpoints
         merges = resume_state.round_idx
         if resume_state.server_opt_state is not None:
             opt_state = resume_state.server_opt_state
@@ -688,6 +973,11 @@ def _run_buffered(
                       "mean_loss": sum(blosses) / len(blosses),
                       "participants": len(buffer),
                       "mean_staleness": sum(bstale) / len(bstale)}
+                if failures is not None:
+                    # failed/slow dispatch attempts since the last merge
+                    rm["dropped"] = acc_up["dropped"]
+                    rm["crashed"] = acc_up["crashed"]
+                    rm["straggled"] = acc_up["straggled"]
                 result.round_metrics.append(rm)
                 if verbose:
                     print(f"  [{strat.name}] merge {merges}: mean loss "
@@ -696,7 +986,8 @@ def _run_buffered(
                 version += 1
                 snapshots[version] = [server.global_adapters, 0]
                 buffer.clear()
-                acc_up = {"param_up": 0, "fisher_up": 0, "wire_up": 0, "down": 0}
+                acc_up = {"param_up": 0, "fisher_up": 0, "wire_up": 0, "down": 0,
+                          "dropped": 0, "crashed": 0, "straggled": 0}
 
         for cid in done_this_tick:
             dispatch(cid, now)

@@ -37,9 +37,17 @@ def main(argv=None):
     ap.add_argument("--client-frac", type=float, default=1.0,
                     help="fraction of clients sampled per round (C in C·K)")
     ap.add_argument("--engine", default="sequential",
-                    choices=["sequential", "vmap", "buffered"],
+                    choices=["sequential", "vmap", "sharded", "buffered"],
                     help="round engine: per-client loop, vectorized vmap/scan "
-                         "cohort, or FedBuff-style buffered async")
+                         "cohort, the vmap layout sharded over a clients "
+                         "device mesh, or FedBuff-style buffered async")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="mesh size for --engine sharded (default: all "
+                         "visible devices; on CPU export XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N first)")
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="disable the sharded engine's prepare/compute "
+                         "double buffer")
     ap.add_argument("--agg-chunk", type=int, default=None,
                     help="fold cohort chunks of this size into a streaming "
                          "merge (O(chunk) server memory; vmap engine)")
@@ -118,6 +126,8 @@ def main(argv=None):
                             use_pallas=args.use_pallas,
                             server_opt=server_opt, sampler=sampler,
                             engine=args.engine, agg_chunk=args.agg_chunk,
+                            devices=args.devices,
+                            overlap=not args.no_overlap,
                             buffer_size=args.buffer_size,
                             failures=failures,
                             checkpoint_dir=os.path.join(args.out, "state"),

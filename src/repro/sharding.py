@@ -15,9 +15,42 @@ import threading
 from typing import Optional, Sequence, Tuple, Union
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 _state = threading.local()
+
+# Axis name of the 1-D federated-cohort mesh: stacked per-client pytrees are
+# partitioned along their leading (client) axis over this axis.
+CLIENT_AXIS = "clients"
+
+
+def client_mesh(n_devices: Optional[int] = None) -> Mesh:
+    """1-D ``("clients",)`` mesh over the first ``n_devices`` local devices.
+
+    The sharded round engine partitions stacked per-client cohort pytrees
+    over this axis with ``shard_map`` (``repro.core.client``). Defaults to
+    every visible device; on CPU force a multi-device topology with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` *before* jax
+    initializes.
+    """
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else int(n_devices)
+    if n < 1:
+        raise ValueError(f"client_mesh needs >= 1 device, got {n}")
+    if n > len(devs):
+        raise ValueError(
+            f"client_mesh(n_devices={n}) but only {len(devs)} devices are "
+            "visible — on CPU, set XLA_FLAGS=--xla_force_host_platform_"
+            f"device_count={n} before the first jax import")
+    return Mesh(np.array(devs[:n]), (CLIENT_AXIS,))
+
+
+def pad_to_multiple(n: int, m: int) -> int:
+    """Smallest multiple of ``m`` that is >= ``n`` (cohort padding width)."""
+    if m < 1:
+        raise ValueError(f"multiple must be >= 1, got {m}")
+    return -(-n // m) * m
 
 
 def current_mesh() -> Optional[Mesh]:

@@ -35,6 +35,21 @@ import jax
 _REGISTRY: Dict[str, Type["Strategy"]] = {}
 
 
+@jax.jit
+def _weighted_sum_stacks_jit(theta_stacks, ws):
+    """Σ over chunks of (w_chunk · θ_chunk) in one dispatch — chunk count
+    and widths are constant within a run, so the trace caches across
+    rounds."""
+    import jax.numpy as jnp
+
+    num = None
+    for t, w in zip(theta_stacks, ws):
+        contrib = jax.tree.map(
+            lambda s, w=w: jnp.tensordot(w, s.astype(jnp.float32), axes=1), t)
+        num = contrib if num is None else jax.tree.map(jnp.add, num, contrib)
+    return num
+
+
 def register(name: str) -> Callable[[Type["Strategy"]], Type["Strategy"]]:
     """Class decorator: ``@register("fednano")`` adds the class to the
     registry and stamps ``cls.name`` so results/logs carry the public name."""
@@ -101,6 +116,19 @@ class Strategy:
             local_adapters=local,
         )
 
+    def init_clients(self, keys, cfg, cids, n_examples):
+        """Batch-initialize a cohort. Bit-identical to per-client
+        ``init_client`` calls (jax.random is counter-based, so the vmapped
+        draw matches K sequential draws exactly). Strategies that override
+        ``init_client`` — ragged or data-dependent state the stacked fast
+        path can't express — automatically fall back to the loop."""
+        if type(self).init_client is not Strategy.init_client:
+            return [self.init_client(k, cfg, cid, n)
+                    for k, cid, n in zip(keys, cids, n_examples)]
+        from repro.core.client import init_clients_batched
+
+        return init_clients_batched(self, keys, cfg, cids, n_examples)
+
     def downloads_global(self, rounds_participated: int) -> bool:
         """Whether the client adopts θ_global at the start of this round.
         ``rounds_participated`` counts the client's OWN prior rounds, so the
@@ -164,6 +192,39 @@ class Strategy:
             like = jax.tree.map(lambda x: x.dtype, thetas[0])
             return {"num": num, "w": w, "like": like}
         return {"num": tree_add(acc["num"], num), "w": acc["w"] + w,
+                "like": acc["like"]}
+
+    def agg_stream_fold_stacked(self, acc, theta_stack, fisher_stack,
+                                weights: Sequence[float], *,
+                                use_pallas: bool = False):
+        """Fold already-stacked ``(K, ...)`` chunk(s) of uploads.
+
+        Device-side counterpart of ``agg_stream_fold``: the sharded engine
+        folds its mesh-resident cohort outputs here without ever gathering
+        them to the host, masking padding rows with zero weights (a
+        zero-weight row contributes nothing to the sums, so padding is
+        provably inert). ``theta_stack``/``fisher_stack``/``weights`` may
+        each be a LIST of per-chunk values — all chunks then fold in one
+        jitted dispatch, so a round pays one cross-device reduction instead
+        of one per chunk (at adapter sizes the collective barrier dwarfs
+        the flops). Accumulator schema is shared with ``agg_stream_fold``/
+        ``agg_stream_finalize``; the fold styles differ only in f32
+        summation order.
+        """
+        if not isinstance(theta_stack, (list, tuple)):
+            theta_stack = [theta_stack]
+            weights = [weights]
+        import jax.numpy as jnp
+
+        ws = tuple(jnp.asarray(list(w), jnp.float32) for w in weights)
+        num = _weighted_sum_stacks_jit(tuple(theta_stack), ws)
+        wsum = float(sum(float(x) for w in weights for x in w))
+        if acc is None:
+            like = jax.tree.map(lambda x: x.dtype, theta_stack[0])
+            return {"num": num, "w": wsum, "like": like}
+        from repro.utils import tree_add
+
+        return {"num": tree_add(acc["num"], num), "w": acc["w"] + wsum,
                 "like": acc["like"]}
 
     def agg_stream_finalize(self, acc, *, use_pallas: bool = False):

@@ -47,6 +47,27 @@ def _fisher_fold_tree_jit(num, den, theta, fisher, w):
         num, den, theta, fisher)
 
 
+@jax.jit
+def _fisher_fold_stacks_jit(theta_stacks, fisher_stacks, ws):
+    """Σ over stacked ``(K, ...)`` chunks of (Σ wFθ, Σ wF) in one dispatch:
+    the client-axis reductions run where the stacks live (sharded over the
+    mesh under the sharded engine), so no per-client tree ever reaches the
+    host — and fusing all chunks into one call pays the cross-device
+    reduction barrier once per round instead of once per chunk."""
+    num = den = None
+    for t, f, w in zip(theta_stacks, fisher_stacks, ws):
+        n = jax.tree.map(
+            lambda tt, ff, w=w: jnp.tensordot(
+                w, ff.astype(jnp.float32) * tt.astype(jnp.float32), axes=1),
+            t, f)
+        d = jax.tree.map(
+            lambda ff, w=w: jnp.tensordot(w, ff.astype(jnp.float32), axes=1),
+            f)
+        num = n if num is None else jax.tree.map(jnp.add, num, n)
+        den = d if den is None else jax.tree.map(jnp.add, den, d)
+    return num, den
+
+
 @register("fedavg")
 @dataclass(frozen=True)
 class FedAvg(Strategy):
@@ -106,6 +127,27 @@ class FedNano(Strategy):
         return {"num": num, "den": den,
                 "w": acc["w"] + float(sum(float(w) for w in weights)),
                 "like": acc["like"]}
+
+    def agg_stream_fold_stacked(self, acc, theta_stack, fisher_stack,
+                                weights, *, use_pallas=False):
+        if not isinstance(theta_stack, (list, tuple)):
+            theta_stack = [theta_stack]
+            fisher_stack = [fisher_stack]
+            weights = [weights]
+        if fisher_stack is None or any(f is None for f in fisher_stack):
+            raise ValueError("fednano streaming merge needs a FIM per upload")
+        ws = tuple(jnp.asarray(list(w), jnp.float32) for w in weights)
+        num, den = _fisher_fold_stacks_jit(
+            tuple(theta_stack), tuple(fisher_stack), ws)
+        wsum = float(sum(float(x) for w in weights for x in w))
+        if acc is None:
+            return {"num": num, "den": den, "w": wsum,
+                    "like": jax.tree.map(lambda x: x.dtype, theta_stack[0])}
+        from repro.utils import tree_add
+
+        return {"num": tree_add(acc["num"], num),
+                "den": tree_add(acc["den"], den),
+                "w": acc["w"] + wsum, "like": acc["like"]}
 
     def agg_stream_finalize(self, acc, *, use_pallas=False, eps: float = 1e-8):
         if acc is None:

@@ -98,15 +98,31 @@ def test_kernels_config_pins_roofline():
 # ---------------------------------------------------------------------------
 
 def test_engine_rows():
+    """Rows are keyed by (clients, devices) — single-host rows (no
+    ``devices`` field, or 1) compare sequential vs vmap; multi-device rows
+    compare vmap vs the sharded engine with the double buffer on AND off,
+    and must be labeled with the run + speedup mechanism."""
     doc = _load("BENCH_engine.json")
-    keys = [r["clients"] for r in doc["results"]]
+    keys = [(r["clients"], r.get("devices", 1)) for r in doc["results"]]
     assert keys == sorted(keys) and len(set(keys)) == len(keys), \
-        "engine rows must be unique and sorted by clients"
+        "engine rows must be unique and sorted by (clients, devices)"
     for i, row in enumerate(doc["results"]):
         ctx = f"BENCH_engine.json results[{i}]"
-        for key in ("sequential_per_round_s", "vmap_per_round_s", "speedup"):
-            _assert_finite_number(row, key, ctx)
         assert isinstance(row.get("strategy"), str), ctx
+        if row.get("devices", 1) > 1:
+            for key in ("vmap_per_round_s", "sharded_per_round_s",
+                        "sharded_no_overlap_per_round_s", "setup_s",
+                        "speedup", "overlap_gain"):
+                _assert_finite_number(row, key, ctx)
+            assert isinstance(row["devices"], int) and row["devices"] > 1, ctx
+            assert isinstance(row.get("label"), str) and row["label"], \
+                f"{ctx}: sharded rows must carry a run label"
+            assert isinstance(row.get("mechanism"), str) and row["mechanism"], \
+                f"{ctx}: sharded rows must explain the speedup mechanism"
+        else:
+            for key in ("sequential_per_round_s", "vmap_per_round_s",
+                        "speedup"):
+                _assert_finite_number(row, key, ctx)
 
 
 def test_serve_rows():
